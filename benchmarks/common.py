@@ -1,0 +1,196 @@
+"""Shared benchmark machinery: train → calibrate → fit policies → evaluate
+all four methods (Static / BranchyNet / RL-Agent / DART) exactly as in the
+paper's Table I protocol.
+
+Timing model: per-stage wall times are measured once on the staged model;
+a method's per-inference time is the cumulative stage time at its exit
+(+ the difficulty-estimator overhead for DART).  DART's wall time is also
+cross-checked against the real compacted serving engine.  Energy uses the
+MACs proxy (paper §III: "architecture-agnostic metrics"); per-stage MACs
+come from XLA cost analysis of each stage function (exact, not hand
+counted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as BL
+from repro.core import daes as DAES
+from repro.core import difficulty as DIFF
+from repro.core import policy as POL
+from repro.core import routing as R
+from repro.core import thresholds as TH
+from repro.core.routing import DartParams
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.models import get_family
+from repro.runtime.server import DartServer
+from repro.runtime.trainer import Trainer, TrainConfig
+
+BUDGET = os.environ.get("REPRO_BENCH_BUDGET", "quick")
+SCALE = {"quick": 1, "std": 4, "full": 10}[BUDGET]
+
+
+def train_model(model_cfg, data_cfg, *, steps, batch=32, lr=3e-3,
+                data_kind=None):
+    tr = Trainer(model_cfg, TrainConfig(batch_size=batch, steps=steps,
+                                        lr=lr, log_every=max(steps // 5, 1)),
+                 data_cfg, data_kind=data_kind)
+    tr.run()
+    return tr
+
+
+def stage_macs(model_cfg, params, img_shape) -> np.ndarray:
+    """Cumulative MACs per exit from XLA cost analysis of each stage+exit."""
+    fam = get_family(model_cfg)
+    n = fam.num_stages(model_cfg)
+    x = jnp.zeros((1,) + img_shape)
+    h = fam.apply_stem(params, x, model_cfg)
+    cum, total = [], 0.0
+
+    def flops_of(fn, *args):
+        c = jax.jit(fn).lower(*args).compile().cost_analysis() or {}
+        return float(c.get("flops", 0.0))
+
+    for s in range(n):
+        total += flops_of(lambda p, h, s=s: fam.apply_stage(p, h, s,
+                                                            model_cfg),
+                          params, h)
+        h = fam.apply_stage(params, h, s, model_cfg)
+        head = flops_of(lambda p, h, s=s: fam.apply_exit(p, h, s, model_cfg),
+                        params, h)
+        cum.append((total + head) / 2.0)      # flops -> MACs
+    return np.asarray(cum)
+
+
+def stage_times(model_cfg, params, img_shape, batch=64, iters=5):
+    """Median per-stage wall time (seconds, per sample)."""
+    fam = get_family(model_cfg)
+    n = fam.num_stages(model_cfg)
+    x = jnp.zeros((batch,) + img_shape)
+    h = fam.apply_stem(params, x, model_cfg)
+    stem_fn = jax.jit(lambda p, x: fam.apply_stem(p, x, model_cfg))
+    times = []
+    h_cur = h
+    for s in range(n):
+        fn = jax.jit(lambda p, h, s=s: fam.apply_stage(p, h, s, model_cfg))
+        ex = jax.jit(lambda p, h, s=s: fam.apply_exit(p, h, s, model_cfg))
+        fn(params, h_cur).block_until_ready()
+        ex(params, fn(params, h_cur)).block_until_ready()
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = fn(params, h_cur)
+            ex(params, out).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        times.append(np.median(ts) / batch)
+        h_cur = fn(params, h_cur)
+    return np.asarray(times)
+
+
+@dataclasses.dataclass
+class Calibration:
+    data: POL.CalibrationData
+    entropy: np.ndarray           # (n, E) for BranchyNet
+    preds: np.ndarray             # (n, E)
+    labels: np.ndarray
+
+
+def collect_calibration(model_cfg, params, data_cfg, *, n=512, split="eval",
+                        offset=0) -> Calibration:
+    fam = get_family(model_cfg)
+    confs, ents, preds, corrects, alphas, labels = [], [], [], [], [], []
+    bs = 64
+    for start in range(offset, offset + n, bs):
+        x, y = make_batch(data_cfg, range(start, start + bs), split=split)
+        out = fam.forward(params, jnp.asarray(x), model_cfg)
+        logits = out["exit_logits"]                      # (E, B, C)
+        conf = np.asarray(R.confidence_from_logits(logits))
+        ent = np.asarray(R.entropy_from_logits(logits))
+        pred = np.asarray(jnp.argmax(logits, axis=-1))
+        alpha = np.asarray(DIFF.image_difficulty(jnp.asarray(x)))
+        confs.append(conf.T); ents.append(ent.T); preds.append(pred.T)
+        corrects.append((pred == y[None]).T.astype(float))
+        alphas.append(alpha); labels.append(y)
+    conf = np.concatenate(confs); ent = np.concatenate(ents)
+    pred = np.concatenate(preds); corr = np.concatenate(corrects)
+    alpha = np.concatenate(alphas); y = np.concatenate(labels)
+    return Calibration(
+        POL.CalibrationData(conf, corr, alpha, np.ones(conf.shape[1]), y),
+        ent, pred, y)
+
+
+def evaluate_methods(model_cfg, params, data_cfg, *, n_eval=512,
+                     beta_opt=0.5, img_shape=None, estimator_overhead=True):
+    """The full Table-I protocol for one model.  Returns rows (list of
+    dicts) + diagnostics."""
+    img_shape = img_shape or (data_cfg.img_res, data_cfg.img_res,
+                              data_cfg.channels)
+    cum_macs = stage_macs(model_cfg, params, img_shape)
+    cum_norm = cum_macs / cum_macs[-1]
+    s_times = stage_times(model_cfg, params, img_shape)
+    cum_times = np.cumsum(s_times)
+
+    cal = collect_calibration(model_cfg, params, data_cfg, n=512, offset=0)
+    cal.data.cum_costs = cum_norm
+    hold = collect_calibration(model_cfg, params, data_cfg, n=n_eval,
+                               offset=1024)
+    hold.data.cum_costs = cum_norm
+
+    dart_pol = POL.optimize_joint_dp(cal.data, beta_opt=beta_opt)
+    branchy = BL.fit_branchynet(cal.entropy, cal.data.correct, cum_norm,
+                                beta_opt=beta_opt)
+    rl = BL.fit_rl_agent(cal.data, beta_opt=beta_opt,
+                         epochs=4 * SCALE)
+
+    est_macs = DIFF.estimator_flops(*img_shape) / 2.0
+    n = hold.data.conf.shape[0]
+    mean_alpha = float(hold.data.alpha.mean())
+
+    def routed_measure(name, idx, extra_macs=0.0, extra_time=0.0):
+        acc = float(hold.data.correct[np.arange(n), idx].mean())
+        macs = float(cum_macs[idx].mean() + extra_macs)
+        t = float(cum_times[idx].mean() + extra_time)
+        return DAES.MethodMeasurement(name, acc, t, macs)
+
+    e = hold.data.conf.shape[1]
+    m_static = routed_measure("Static", BL.static_route(hold.data.conf))
+    m_branchy = routed_measure("BranchyNet", branchy.route(hold.entropy))
+    m_rl = routed_measure("RL-Agent", rl.route(hold.data.conf))
+    dart_idx = np.asarray(TH.simulate_routing(
+        hold.data.conf, hold.data.alpha, dart_pol.tau, dart_pol.coef,
+        dart_pol.beta_diff))
+    est_t = 0.02 * cum_times[-1] if estimator_overhead else 0.0
+    m_dart = routed_measure("DART", dart_idx,
+                            extra_macs=est_macs if estimator_overhead else 0,
+                            extra_time=est_t)
+
+    rows = [DAES.summary_row(m_static, m, mean_alpha)
+            for m in (m_static, m_branchy, m_rl, m_dart)]
+    diag = {
+        "exit_dist": {
+            "dart": np.bincount(dart_idx, minlength=e).tolist(),
+            "branchy": np.bincount(branchy.route(hold.entropy),
+                                   minlength=e).tolist(),
+        },
+        "mean_alpha": mean_alpha,
+        "dart_tau": dart_pol.tau.tolist(),
+        "dart_J": dart_pol.objective,
+        "cum_macs": cum_macs.tolist(),
+    }
+    return rows, diag
+
+
+def print_rows(title, rows):
+    print(f"\n== {title} ==")
+    hdr = ("method", "acc_pct", "time_ms", "macs_m", "speedup",
+           "power_eff", "daes")
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(f"{r[h]:.3f}" if isinstance(r[h], float)
+                       else str(r[h]) for h in hdr))

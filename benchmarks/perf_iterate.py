@@ -1,0 +1,132 @@
+"""§Perf hillclimbing driver: hypothesis → change → re-lower → measure.
+
+Runs the three selected cells' sharding/routing variants through the
+dry-run and prints the before/after roofline terms per iteration,
+together with the napkin-math hypothesis that motivated each change.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterate [--cell N]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+from benchmarks.roofline import roofline
+
+OUT = "artifacts/perf"
+
+# (arch, shape, [(variant, hypothesis), ...])
+PLAN = [
+    ("tinyllama-1.1b", "train_4k", [
+        ("baseline",
+         "Megatron-TP over model=16: 2 activation all-reduces per layer "
+         "fwd + more in bwd; for a 1.1B model the layer shards are tiny, "
+         "so collectives dominate (measured 1.58s vs 0.33s compute)"),
+        ("sp",
+         "H1: sequence-parallel residual (RS+AG instead of AR, buffers "
+         "1/16) should cut collective bytes ~2x and temp memory ~10x: "
+         "AR moves 2*bytes*(n-1)/n, RS+AG moves (1+1)*bytes*(n-1)/n but "
+         "the f32 copies and remat-stored activations shrink by 16x"),
+        ("fsdp-dp",
+         "H2: for a 1.1B model TP=16 is over-sharding — repurpose the "
+         "model axis as data parallelism (ZeRO-3). Per-layer activation "
+         "ARs disappear entirely; instead each layer all-gathers its "
+         "weights: traffic = 3 passes x 2.2GB params bf16 = 6.6GB/step "
+         "vs measured 74GB baseline => ~11x collective reduction, plus "
+         "grad reduce-scatter 2.2GB"),
+    ]),
+    ("deepseek-v3-671b", "train_4k", [
+        ("baseline",
+         "MoE combine = psum over model axis: every MoE layer all-reduces "
+         "the full (B_loc,S,D) residual (1.9GB bf16) x58 layers x fwd+bwd "
+         "=> collective-dominated (measured 19.7s vs 9.4s compute)"),
+        ("sp",
+         "H1: SP residual cuts the dense-side AR traffic and the stored "
+         "activations 16x; MoE psum unchanged => expect modest (<30%) "
+         "collective win but large temp win"),
+        ("a2a",
+         "H2: token-sharded EP with all-to-all dispatch (the DeepSeek "
+         "deployment): tokens sharded over model too; wire bytes per "
+         "layer = 2 x T_loc/16 x k x D x cap versus AR's 2 x T_loc x D "
+         "=> (k x cap / 16) / 2 ~ 0.31x of the AR bytes at top-8 cap1.25 "
+         "=> expect ~3x collective reduction on MoE layers"),
+    ]),
+    ("deepseek-v3-671b", "decode_32k", [
+        ("baseline",
+         "Full-depth masked decode: all 61 layers + 4 vocab heads per "
+         "token; memory-bound on streamed expert weights"),
+        ("trunc45",
+         "DART expected-depth component: tokens exiting at layer 44 pay "
+         "45/61 of weight streaming (exit head already computed)"),
+        ("trunc30",
+         "component for exits at layer 29: ~half the weight traffic"),
+        ("trunc15",
+         "component for exits at layer 14: ~quarter of the weight "
+         "traffic. Blended roofline = sum_k pi_k * term_k with pi from "
+         "the calibrated DART policy (EXPERIMENTS.md §Perf)"),
+    ]),
+]
+
+
+def iterate_cell(arch, shape, variants, multi_pod=False):
+    print(f"\n===== §Perf cell: {arch} × {shape} =====")
+    results = []
+    for variant, hypothesis in variants:
+        print(f"\n--- variant: {variant}")
+        print(f"    hypothesis: {hypothesis}")
+        suffix = "" if variant == "baseline" else f"__{variant}"
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        reuse = None
+        for d in (OUT, "artifacts/dryrun"):
+            fn = os.path.join(d, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+            if os.path.exists(fn):
+                reuse = fn
+                break
+        if reuse:
+            print(f"    (reusing artifact {reuse})")
+            with open(reuse) as f:
+                rec = json.load(f)
+        else:
+            rec = run_cell(arch, shape, multi_pod=multi_pod, outdir=OUT,
+                           variant=variant)
+        r = roofline(rec)
+        results.append({"variant": variant, "hypothesis": hypothesis,
+                        **{k: r[k] for k in ("compute_s", "memory_s",
+                                             "collective_s", "bottleneck",
+                                             "roofline_fraction")},
+                        "temp_GiB": rec["memory"]["temp_bytes"] / 2**30,
+                        "compile_s": rec["compile_s"]})
+        print(f"    compute {r['compute_s']:.3e}s  memory "
+              f"{r['memory_s']:.3e}s  collective {r['collective_s']:.3e}s"
+              f"  bottleneck={r['bottleneck']}  "
+              f"frac={r['roofline_fraction']:.3f}  "
+              f"temp={rec['memory']['temp_bytes']/2**30:.1f}GiB")
+        if len(results) > 1:
+            base, cur = results[0], results[-1]
+            dom0 = max(base["compute_s"], base["memory_s"],
+                       base["collective_s"])
+            dom1 = max(cur["compute_s"], cur["memory_s"],
+                       cur["collective_s"])
+            print(f"    vs baseline: dominant term {dom0:.3e} -> "
+                  f"{dom1:.3e}  ({dom0/max(dom1,1e-12):.2f}x)")
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{arch}__{shape}__iterations.json"),
+              "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", type=int, default=None)
+    args = ap.parse_args()
+    plan = PLAN if args.cell is None else [PLAN[args.cell]]
+    for arch, shape, variants in plan:
+        iterate_cell(arch, shape, variants)
+
+
+if __name__ == "__main__":
+    main()

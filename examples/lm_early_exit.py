@@ -1,0 +1,51 @@
+"""DART on a language model: train a small multi-exit LM, then decode with
+REAL per-token layer skipping + CALM state propagation (DESIGN.md §3).
+
+Run:  PYTHONPATH=src python examples/lm_early_exit.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.routing import DartParams
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.models.transformer_lm import LMConfig
+from repro.runtime.lm_server import LMDecodeServer
+from repro.runtime.trainer import Trainer, TrainConfig
+
+DATA = DatasetConfig(name="tokens", n_train=2048)
+CFG = LMConfig(name="lm-demo", n_layers=6, d_model=64, n_heads=4,
+               n_kv_heads=2, d_ff=128, vocab=64, exit_layers=(1, 3),
+               max_seq=64, remat=False)
+
+
+def main():
+    print("training 6-layer LM with exits at layers 1 and 3 ...")
+    tr = Trainer(CFG, TrainConfig(batch_size=16, steps=400, lr=5e-3,
+                                  log_every=30), DATA, data_kind="tokens")
+    tr.run()
+    print("loss:", [round(h["loss"], 3) for h in tr.history])
+
+    dart = DartParams(tau=jnp.asarray([0.35, 0.4]), coef=jnp.ones(2),
+                      beta_diff=0.15)
+    srv = LMDecodeServer(CFG, tr.params, dart)
+
+    prompts, _ = make_batch(DATA, range(8), kind="tokens", seq_len=17,
+                            vocab=CFG.vocab)
+    gen, stages = srv.generate(prompts[:, :9], n_new=16, max_len=64)
+    print("\ngenerated shapes:", gen.shape)
+    print("exit-stage histogram over generated tokens:",
+          np.bincount(stages.ravel(), minlength=3).tolist(),
+          "(stage 0 = after layer 1, 1 = after layer 3, 2 = full depth)")
+    total = srv.layers_run + srv.layers_skipped
+    print(f"layers run {srv.layers_run}, skipped {srv.layers_skipped} "
+          f"({100*srv.layers_skipped/max(total,1):.1f}% of full-depth "
+          f"compute avoided; skipped layers only pay the KV-projection "
+          f"propagation)")
+
+    # token continuation quality check: motif should be continued
+    print("\nprompt   :", prompts[0, :9].tolist())
+    print("generated:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (save, save_async, restore,
+                                         latest_step, CheckpointManager)

@@ -1,0 +1,14 @@
+"""convnext-b — ConvNeXt-Base [arXiv:2201.03545]: 3-3-27-3, 128..1024."""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.convnext import ConvNeXtConfig
+
+CONFIG = ConvNeXtConfig(
+    name="convnext-b", depths=(3, 3, 27, 3), dims=(128, 256, 512, 1024),
+    img_res=224, n_classes=1000, exit_stages=(0, 1, 2),
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, depths=(1, 1, 2, 1), dims=(16, 32, 48, 64), img_res=32,
+    n_classes=10, param_dtype=jnp.float32, compute_dtype=jnp.float32)

@@ -1,0 +1,29 @@
+"""deepseek-v3-671b — MLA + 1 shared + 256 routed top-8 MoE + MTP
+[arXiv:2412.19437].
+
+61L, d_model 7168, 128 heads, per-expert d_ff 2048, vocab 129280,
+first 3 layers dense (d_ff 18432).  MLA latent cache (c_kv 512 + rope 64).
+"""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.transformer_lm import LMConfig
+from repro.models.moe import MoEConfig
+
+CONFIG = LMConfig(
+    name="deepseek-v3-671b", n_layers=61, d_model=7168, n_heads=128,
+    n_kv_heads=128, d_ff=18432, vocab=129280, attn_kind="mla",
+    moe=MoEConfig(n_experts=256, top_k=8, d_ff=2048, n_shared=1),
+    moe_ep_mode="ep", n_dense_layers=3, exit_layers=(14, 29, 44),
+    max_seq=4096, rope_theta=10000.0, param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16, remat=True, tie_embeddings=False,
+    mtp=True, q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+    qk_rope_dim=64, v_head_dim=128,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab=256, moe=MoEConfig(n_experts=8, top_k=2, d_ff=32, n_shared=1),
+    n_dense_layers=1, exit_layers=(1,), max_seq=128, remat=False,
+    mtp=True, q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+    qk_rope_dim=8, v_head_dim=16,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32)

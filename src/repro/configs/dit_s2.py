@@ -1,0 +1,15 @@
+"""dit-s2 — DiT-S/2 [arXiv:2212.09748]: 12L, d_model 384, 6 heads, patch 2."""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.dit import DiTConfig
+
+CONFIG = DiTConfig(
+    name="dit-s2", img_res=256, patch=2, n_layers=12, d_model=384,
+    n_heads=6, n_classes=1000, exit_layers=(3, 7),
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16, remat=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, img_res=64, n_layers=3, d_model=64, n_heads=4, n_classes=10,
+    exit_layers=(0,), remat=False,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32)

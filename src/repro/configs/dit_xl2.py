@@ -1,0 +1,15 @@
+"""dit-xl2 — DiT-XL/2 [arXiv:2212.09748]: 28L, d_model 1152, 16 heads."""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.dit import DiTConfig
+
+CONFIG = DiTConfig(
+    name="dit-xl2", img_res=256, patch=2, n_layers=28, d_model=1152,
+    n_heads=16, n_classes=1000, exit_layers=(6, 13, 20),
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16, remat=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, img_res=64, n_layers=4, d_model=96, n_heads=4, n_classes=10,
+    exit_layers=(1,), remat=False,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32)

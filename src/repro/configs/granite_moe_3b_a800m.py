@@ -1,0 +1,25 @@
+"""granite-moe-3b-a800m — [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+32L, d_model 1536, 24 heads (GQA kv=8), per-expert d_ff 512, vocab 49155,
+MoE 40 experts top-8.  40 % 16 != 0 => TP-in-expert layout ("tp" mode,
+DESIGN.md §4.3); vocab 49155 is odd => embedding sharded on d_model.
+"""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.transformer_lm import LMConfig
+from repro.models.moe import MoEConfig
+
+CONFIG = LMConfig(
+    name="granite-moe-3b-a800m", n_layers=32, d_model=1536, n_heads=24,
+    n_kv_heads=8, d_ff=512, vocab=49155,
+    moe=MoEConfig(n_experts=40, top_k=8, d_ff=512, n_shared=0),
+    moe_ep_mode="tp", n_dense_layers=0, exit_layers=(7, 15, 23),
+    max_seq=4096, param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    remat=True, tie_embeddings=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, d_ff=64,
+    vocab=256, moe=MoEConfig(n_experts=8, top_k=2, d_ff=64, n_shared=0),
+    exit_layers=(0,), max_seq=128, remat=False,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32)

@@ -1,0 +1,63 @@
+"""Architecture registry: ``--arch <id>`` lookup for every entrypoint.
+
+``get(arch)``         — full (assignment-exact) config
+``get_reduced(arch)`` — smoke-test config of the same family
+``shapes(arch)``      — the arch's assigned input-shape set
+``cells()``           — the full 40-cell (arch × shape) dry-run matrix
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models import family_of
+from repro.configs.shapes import shapes_for_family, ShapeSpec
+
+ASSIGNED = {
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "dit-s2": "repro.configs.dit_s2",
+    "dit-xl2": "repro.configs.dit_xl2",
+    "vit-h14": "repro.configs.vit_h14",
+    "convnext-b": "repro.configs.convnext_b",
+    "resnet-152": "repro.configs.resnet_152",
+    "vit-s16": "repro.configs.vit_s16",
+}
+
+
+def _module(arch: str):
+    if arch not in ASSIGNED:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ASSIGNED)}")
+    return importlib.import_module(ASSIGNED[arch])
+
+
+def get(arch: str):
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str):
+    return _module(arch).REDUCED
+
+
+def shapes(arch: str) -> tuple[ShapeSpec, ...]:
+    return shapes_for_family(family_of(get(arch)))
+
+
+def cells():
+    """All (arch, shape) dry-run cells."""
+    out = []
+    for arch in ASSIGNED:
+        for sp in shapes(arch):
+            out.append((arch, sp))
+    return out
+
+
+def paper_testbeds():
+    from repro.configs import paper_testbeds as pt
+    return {
+        "alexnet": pt.ALEXNET_CIFAR, "alexnet-mnist": pt.ALEXNET_MNIST,
+        "resnet-18": pt.RESNET18_CIFAR, "vgg16": pt.VGG16_CIFAR,
+        "levit-128s": pt.LEVIT_128S, "levit-192": pt.LEVIT_192,
+        "levit-256": pt.LEVIT_256,
+    }

@@ -1,0 +1,14 @@
+"""resnet-152 — [arXiv:1512.03385]: bottleneck 3-8-36-3, width 64."""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.resnet import ResNetConfig
+
+CONFIG = ResNetConfig(
+    name="resnet-152", depths=(3, 8, 36, 3), width=64, block="bottleneck",
+    img_res=224, n_classes=1000, exit_stages=(0, 1, 2),
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, depths=(1, 1, 2, 1), width=16, img_res=32, n_classes=10,
+    small_input=True, param_dtype=jnp.float32, compute_dtype=jnp.float32)

@@ -1,0 +1,54 @@
+"""Assigned input-shape sets per architecture family (40 cells total).
+
+Each shape names the *step kind* the dry-run lowers:
+* ``train``   — full train_step (fwd + bwd + optimizer update)
+* ``prefill`` — LM prompt processing filling the KV cache
+* ``decode``  — LM single-token serve_step against a KV cache
+* ``denoise`` — one diffusion sampler step (the N-step loop repeats it)
+* ``serve``   — vision forward with DART routing (masked mode)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                 # train | prefill | decode | denoise | serve
+    batch: int
+    seq_len: int | None = None          # LM
+    img_res: int | None = None          # vision / diffusion (pixel res)
+    steps: int | None = None            # diffusion sampler steps (loop count)
+    note: str = ""
+
+
+LM_SHAPES = (
+    ShapeSpec("train_4k", "train", batch=256, seq_len=4096),
+    ShapeSpec("prefill_32k", "prefill", batch=32, seq_len=32768),
+    ShapeSpec("decode_32k", "decode", batch=128, seq_len=32768),
+    ShapeSpec("long_500k", "decode", batch=1, seq_len=524288,
+              note="single-token decode is LINEAR in cache length, so this "
+                   "cell is runnable even for softmax attention; the "
+                   "assignment's sub-quadratic skip rule applies to "
+                   "prefill-like quadratic work (DESIGN.md §3)"),
+)
+
+DIFFUSION_SHAPES = (
+    ShapeSpec("train_256", "train", batch=256, img_res=256, steps=1000),
+    ShapeSpec("gen_1024", "denoise", batch=4, img_res=1024, steps=50),
+    ShapeSpec("gen_fast", "denoise", batch=16, img_res=512, steps=4),
+    ShapeSpec("train_1024", "train", batch=32, img_res=1024, steps=1000),
+)
+
+VISION_SHAPES = (
+    ShapeSpec("cls_224", "train", batch=256, img_res=224),
+    ShapeSpec("cls_384", "train", batch=64, img_res=384),
+    ShapeSpec("serve_b1", "serve", batch=1, img_res=224),
+    ShapeSpec("serve_b128", "serve", batch=128, img_res=224),
+)
+
+
+def shapes_for_family(family: str):
+    return {"lm": LM_SHAPES, "dit": DIFFUSION_SHAPES}.get(family,
+                                                          VISION_SHAPES)

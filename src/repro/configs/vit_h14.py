@@ -1,0 +1,15 @@
+"""vit-h14 — ViT-Huge/14 [arXiv:2010.11929]: 32L, d 1280, 16H, ff 5120."""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.vit import ViTConfig
+
+CONFIG = ViTConfig(
+    name="vit-h14", img_res=224, patch=14, n_layers=32, d_model=1280,
+    n_heads=16, d_ff=5120, n_classes=1000, exit_layers=(7, 15, 23),
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16, remat=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, img_res=32, patch=8, n_layers=4, d_model=64, n_heads=4,
+    d_ff=128, n_classes=10, exit_layers=(1,), remat=False,
+    param_dtype=jnp.float32, compute_dtype=jnp.float32)

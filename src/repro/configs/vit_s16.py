@@ -1,0 +1,15 @@
+"""vit-s16 — ViT-Small/16 [arXiv:2010.11929]: 12L, d 384, 6H, ff 1536."""
+import dataclasses
+import jax.numpy as jnp
+from repro.models.vit import ViTConfig
+
+CONFIG = ViTConfig(
+    name="vit-s16", img_res=224, patch=16, n_layers=12, d_model=384,
+    n_heads=6, d_ff=1536, n_classes=1000, exit_layers=(3, 7),
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, img_res=32, patch=8, n_layers=3, d_model=48, n_heads=4,
+    d_ff=96, n_classes=10, exit_layers=(0,),
+    param_dtype=jnp.float32, compute_dtype=jnp.float32)

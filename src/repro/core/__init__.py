@@ -1,0 +1,15 @@
+"""DART core — the paper's contribution.
+
+difficulty   — §II.A multi-modal difficulty estimation (Eqs. 1–8, 17)
+thresholds   — Eq. 12 calibration, Eq. 19 adaptation, Alg. 1 selection
+policy       — §II.B joint exit-policy optimization (Eqs. 10–11)
+adaptive     — §II.C coefficient management (Eqs. 13–15, UCB1)
+routing      — batched execution modes + confidence functionals
+baselines    — Static / BranchyNet / RL-Agent (Table I)
+daes         — §II.A.3 DAES metric (Eq. 9) + Eqs. 20–22
+"""
+from repro.core import (adaptive, baselines, daes, difficulty, policy,
+                        routing, thresholds)
+from repro.core.routing import DartParams
+from repro.core.policy import CalibrationData, PolicyResult
+from repro.core.difficulty import DifficultyConfig

@@ -1,0 +1,178 @@
+"""DART adaptive coefficient management — paper §II.C (Eqs. 13–15).
+
+State is a pure pytree (jit-, shard- and checkpoint-friendly):
+
+* sliding window (w = 1000) of per-inference records: exit index, class
+  (pseudo-label), confidence, correctness-proxy, cost;
+* per-exit temporal coefficients (Eq. 13, exponential decay);
+* per-(class, exit) coefficients (Eq. 14, pseudo-label updates);
+* UCB1 bandit counters over adaptation strategies (Eq. 15).
+
+With UCB disabled the system reduces to deterministic threshold
+adaptation driven by the same sliding-window statistics (paper §II.C.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+STRATEGIES = ("temporal", "class_aware", "hybrid", "frozen")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    n_exits: int
+    n_classes: int
+    window: int = 1000              # paper: w = 1000
+    alpha_decay: float = 0.95       # paper: α_decay
+    eta: float = 0.05               # Eq. 14 adaptation rate
+    a_target: float = 0.85          # Eq. 14 target accuracy
+    kappa: float = 0.5              # Eq. 13 performance→coefficient gain
+    coef_min: float = 0.5
+    coef_max: float = 1.5
+    pseudo_label_conf: float = 0.9  # min confidence to accept pseudo-label
+    ucb_enabled: bool = True
+    update_every: int = 100         # small periodic updates
+
+
+def init_state(cfg: AdaptiveConfig):
+    e1 = cfg.n_exits - 1
+    w = cfg.window
+    return {
+        # ring buffers (sliding window)
+        "buf_exit": jnp.zeros((w,), jnp.int32),
+        "buf_class": jnp.zeros((w,), jnp.int32),
+        "buf_conf": jnp.zeros((w,), jnp.float32),
+        "buf_correct": jnp.zeros((w,), jnp.float32),   # pseudo-correctness
+        "buf_cost": jnp.zeros((w,), jnp.float32),
+        "buf_valid": jnp.zeros((w,), jnp.float32),
+        "ptr": jnp.zeros((), jnp.int32),
+        "seen": jnp.zeros((), jnp.int32),
+        # coefficients
+        "coef_temporal": jnp.ones((e1,), jnp.float32),
+        "coef_class": jnp.ones((cfg.n_classes, e1), jnp.float32),
+        # UCB1 (Eq. 15)
+        "ucb_counts": jnp.zeros((len(STRATEGIES),), jnp.float32),
+        "ucb_rewards": jnp.zeros((len(STRATEGIES),), jnp.float32),
+        "active_strategy": jnp.zeros((), jnp.int32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def record_batch(state, cfg: AdaptiveConfig, exit_idx, pseudo_class, conf,
+                 correct, cost):
+    """Append a batch of inference records into the ring buffer.
+    All args: (B,) arrays.  ``correct`` may be pseudo-correctness (agreement
+    with the final head or high-confidence self-agreement) when no labels
+    exist during deployment."""
+    b = exit_idx.shape[0]
+    w = cfg.window
+    idx = (state["ptr"] + jnp.arange(b)) % w
+    s = dict(state)
+    s["buf_exit"] = state["buf_exit"].at[idx].set(exit_idx.astype(jnp.int32))
+    s["buf_class"] = state["buf_class"].at[idx].set(
+        pseudo_class.astype(jnp.int32))
+    s["buf_conf"] = state["buf_conf"].at[idx].set(conf.astype(jnp.float32))
+    s["buf_correct"] = state["buf_correct"].at[idx].set(
+        correct.astype(jnp.float32))
+    s["buf_cost"] = state["buf_cost"].at[idx].set(cost.astype(jnp.float32))
+    s["buf_valid"] = state["buf_valid"].at[idx].set(1.0)
+    s["ptr"] = (state["ptr"] + b) % w
+    s["seen"] = state["seen"] + b
+    return s
+
+
+def window_stats(state, cfg: AdaptiveConfig):
+    """Windowed accuracy / cost / per-class accuracy / per-exit counts."""
+    v = state["buf_valid"]
+    n = jnp.maximum(jnp.sum(v), 1.0)
+    acc = jnp.sum(state["buf_correct"] * v) / n
+    cost = jnp.sum(state["buf_cost"] * v) / n
+    onehot_c = jax.nn.one_hot(state["buf_class"], cfg.n_classes) * v[:, None]
+    cls_n = jnp.maximum(jnp.sum(onehot_c, axis=0), 1.0)
+    cls_acc = jnp.sum(onehot_c * state["buf_correct"][:, None], axis=0) / cls_n
+    onehot_e = jax.nn.one_hot(state["buf_exit"], cfg.n_exits) * v[:, None]
+    exit_frac = jnp.sum(onehot_e, axis=0) / n
+    return {"acc": acc, "cost": cost, "class_acc": cls_acc,
+            "class_n": jnp.sum(onehot_c, axis=0), "exit_frac": exit_frac,
+            "n": n}
+
+
+def temporal_update(state, cfg: AdaptiveConfig):
+    """Eq. 13: c_t = α_decay·c_{t−1} + (1−α_decay)·f(performance_t).
+
+    f maps windowed accuracy to a coefficient target: accuracy below the
+    target raises coefficients (more conservative exits)."""
+    st = window_stats(state, cfg)
+    target = 1.0 + cfg.kappa * (cfg.a_target - st["acc"])
+    c = cfg.alpha_decay * state["coef_temporal"] \
+        + (1.0 - cfg.alpha_decay) * target
+    s = dict(state)
+    s["coef_temporal"] = jnp.clip(c, cfg.coef_min, cfg.coef_max)
+    return s
+
+
+def class_aware_update(state, cfg: AdaptiveConfig):
+    """Eq. 14: c_class += η·(A_target − A_class), from pseudo-labels."""
+    st = window_stats(state, cfg)
+    has_data = (st["class_n"] > 0).astype(jnp.float32)[:, None]
+    delta = cfg.eta * (cfg.a_target - st["class_acc"])[:, None] * has_data
+    s = dict(state)
+    s["coef_class"] = jnp.clip(state["coef_class"] + delta,
+                               cfg.coef_min, cfg.coef_max)
+    return s
+
+
+def ucb_select(state, cfg: AdaptiveConfig):
+    """Eq. 15: UCB_i(t) = r̄_i + sqrt(2 ln t / n_i).  Untried arms first."""
+    t = jnp.maximum(state["t"].astype(jnp.float32), 1.0)
+    n = state["ucb_counts"]
+    mean_r = state["ucb_rewards"] / jnp.maximum(n, 1.0)
+    ucb = jnp.where(n > 0, mean_r + jnp.sqrt(2.0 * jnp.log(t)
+                                             / jnp.maximum(n, 1.0)),
+                    jnp.inf)
+    return jnp.argmax(ucb).astype(jnp.int32)
+
+
+def ucb_update(state, cfg: AdaptiveConfig, reward):
+    """Credit the active strategy with the windowed Eq. 10 reward."""
+    arm = state["active_strategy"]
+    s = dict(state)
+    s["ucb_counts"] = state["ucb_counts"].at[arm].add(1.0)
+    s["ucb_rewards"] = state["ucb_rewards"].at[arm].add(reward)
+    s["t"] = state["t"] + 1
+    if cfg.ucb_enabled:
+        s["active_strategy"] = ucb_select(s, cfg)
+    return s
+
+
+def effective_coef(state, cfg: AdaptiveConfig, pseudo_class=None):
+    """Coefficient vector for the *active* strategy.
+
+    pseudo_class: (B,) predicted classes (class-aware strategies index the
+    per-class table with them); None → batch-agnostic (E-1,)."""
+    temporal = state["coef_temporal"]
+    if pseudo_class is None:
+        class_c = jnp.mean(state["coef_class"], axis=0)
+    else:
+        class_c = state["coef_class"][pseudo_class]         # (B, E-1)
+        temporal = jnp.broadcast_to(temporal, class_c.shape)
+    frozen = jnp.ones_like(temporal)
+    hybrid = 0.5 * (temporal + class_c)
+    stacked = jnp.stack([temporal, class_c, hybrid, frozen])
+    return stacked[state["active_strategy"]]
+
+
+def periodic_update(state, cfg: AdaptiveConfig, beta_opt=0.5):
+    """One small periodic refinement step (paper §II.C.2): run both
+    adaptation laws, score the window with the Eq. 10 reward, update UCB."""
+    st = window_stats(state, cfg)
+    reward = st["acc"] - beta_opt * st["cost"]
+    state = temporal_update(state, cfg)
+    state = class_aware_update(state, cfg)
+    state = ucb_update(state, cfg, reward)
+    return state

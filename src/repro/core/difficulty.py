@@ -1,0 +1,208 @@
+"""DART difficulty estimation — paper §II.A (Eqs. 1–8) and §II.D (Eq. 17).
+
+Three complementary per-input metrics, fused with weights (w1, w2, w3):
+
+* ``edge density``      — Sobel gradient magnitude thresholded (Eqs. 1–4)
+* ``pixel variance``    — spatial variance per channel, averaged (Eqs. 5–6)
+* ``gradient complexity`` — mean |Laplacian| response (Eq. 7)
+
+The paper's empirical weights are (0.4, 0.3, 0.3); β_diff = 0.3.
+
+This module is the pure-jnp reference ("ref") implementation; the fused
+Pallas kernel lives in ``repro.kernels.difficulty`` and is validated
+against :func:`image_difficulty` (see tests/test_kernels.py).  The
+``estimate`` dispatcher picks the kernel when enabled.
+
+Domain adapters (DESIGN.md §3):
+* images  — the paper, verbatim.
+* tokens  — LM inputs: the three metrics transposed to embedding space
+  (transition energy / feature variance / second difference).
+* latents — diffusion: image metrics on the current latent, scaled by the
+  signal fraction sqrt(ᾱ_t) (high-noise steps are easy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+SOBEL_X = jnp.array([[-1.0, 0.0, 1.0],
+                     [-2.0, 0.0, 2.0],
+                     [-1.0, 0.0, 1.0]], jnp.float32)
+SOBEL_Y = SOBEL_X.T
+LAPLACIAN = jnp.array([[0.0, 1.0, 0.0],
+                       [1.0, -4.0, 1.0],
+                       [0.0, 1.0, 0.0]], jnp.float32)
+
+LUMA = jnp.array([0.299, 0.587, 0.114], jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DifficultyConfig:
+    w_edge: float = 0.4          # paper: w1
+    w_variance: float = 0.3      # paper: w2
+    w_gradient: float = 0.3      # paper: w3
+    tau_edge: float = 0.1        # Eq. 4 threshold (on [0,1] images)
+    var_scale: float = 0.05      # variance squashing scale
+    grad_scale: float = 0.2      # |Laplacian| squashing scale
+    beta_diff: float = 0.3       # Eq. 19 sensitivity
+
+    @property
+    def weights(self):
+        return (self.w_edge, self.w_variance, self.w_gradient)
+
+
+DEFAULT = DifficultyConfig()
+
+
+def to_grayscale(images):
+    """(B, H, W, C) -> (B, H, W).  Luminance for C==3, mean otherwise."""
+    c = images.shape[-1]
+    if c == 3:
+        return jnp.einsum("bhwc,c->bhw", images.astype(jnp.float32), LUMA)
+    return jnp.mean(images.astype(jnp.float32), axis=-1)
+
+
+def _conv3x3(img, kernel):
+    """Valid 3x3 convolution on (B, H, W) with a (3,3) kernel."""
+    return lax.conv_general_dilated(
+        img[:, :, :, None], kernel[:, :, None, None],
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[:, :, :, 0]
+
+
+def edge_density(images, tau_edge=DEFAULT.tau_edge):
+    """Eqs. 1–4.  images: (B, H, W, C) in [0,1].  Returns (B,)."""
+    g = to_grayscale(images)
+    gx = _conv3x3(g, SOBEL_X)
+    gy = _conv3x3(g, SOBEL_Y)
+    mag = jnp.sqrt(gx * gx + gy * gy)
+    return jnp.mean((mag > tau_edge).astype(jnp.float32), axis=(1, 2))
+
+
+def pixel_variance(images, var_scale=DEFAULT.var_scale):
+    """Eqs. 5–6 with squashing to [0,1].  Returns (B,)."""
+    x = images.astype(jnp.float32)
+    mu = jnp.mean(x, axis=(1, 2), keepdims=True)           # per (b, c)
+    var = jnp.mean(jnp.square(x - mu), axis=(1, 2, 3))     # 1/(CHW) Σ (·)²
+    return 1.0 - jnp.exp(-var / var_scale)
+
+
+def gradient_complexity(images, grad_scale=DEFAULT.grad_scale):
+    """Eq. 7 with squashing to [0,1].  Returns (B,)."""
+    g = to_grayscale(images)
+    lap = _conv3x3(g, LAPLACIAN)
+    mean_abs = jnp.mean(jnp.abs(lap), axis=(1, 2))
+    return 1.0 - jnp.exp(-mean_abs / grad_scale)
+
+
+def fuse(alpha_edge, alpha_var, alpha_grad, cfg: DifficultyConfig = DEFAULT):
+    """Eq. 8: α = w1·α_edge + w2·α_var + w3·α_grad, clamped to [0,1]."""
+    a = (cfg.w_edge * alpha_edge + cfg.w_variance * alpha_var
+         + cfg.w_gradient * alpha_grad)
+    return jnp.clip(a, 0.0, 1.0)
+
+
+def image_difficulty(images, cfg: DifficultyConfig = DEFAULT):
+    """The paper's difficulty score for a batch of images.  (B,) in [0,1]."""
+    return fuse(edge_density(images, cfg.tau_edge),
+                pixel_variance(images, cfg.var_scale),
+                gradient_complexity(images, cfg.grad_scale), cfg)
+
+
+def image_difficulty_components(images, cfg: DifficultyConfig = DEFAULT):
+    e = edge_density(images, cfg.tau_edge)
+    v = pixel_variance(images, cfg.var_scale)
+    g = gradient_complexity(images, cfg.grad_scale)
+    return {"edge": e, "variance": v, "gradient": g, "alpha": fuse(e, v, g, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Token domain (LM) — Eq. 17 transposed to embedding space (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def token_difficulty(embeddings, cfg: DifficultyConfig = DEFAULT,
+                     edge_tau: float = 1.0):
+    """embeddings: (B, S, D) input-token embeddings.  Returns (B,) in [0,1].
+
+    * edge analogue    — fraction of token transitions with RMS step > τ
+    * variance analogue — feature variance (squashed)
+    * gradient analogue — RMS second difference (squashed)
+    """
+    x = embeddings.astype(jnp.float32)
+    if x.shape[1] < 3:
+        # decode steps: fall back to feature variance only
+        var = jnp.var(x, axis=(1, 2))
+        return jnp.clip(1.0 - jnp.exp(-var / cfg.var_scale), 0.0, 1.0)
+    d1 = x[:, 1:] - x[:, :-1]
+    step = jnp.sqrt(jnp.mean(jnp.square(d1), axis=-1))      # (B, S-1) RMS
+    a_edge = jnp.mean((step > edge_tau).astype(jnp.float32), axis=-1)
+    var = jnp.var(x, axis=(1, 2))
+    a_var = 1.0 - jnp.exp(-var / (10 * cfg.var_scale))
+    d2 = x[:, 2:] - 2 * x[:, 1:-1] + x[:, :-2]
+    curv = jnp.mean(jnp.sqrt(jnp.mean(jnp.square(d2), axis=-1)), axis=-1)
+    a_grad = 1.0 - jnp.exp(-curv / (10 * cfg.grad_scale))
+    return fuse(a_edge, a_var, a_grad, cfg)
+
+
+def token_difficulty_ema(prev_alpha, new_embedding, cfg=DEFAULT,
+                         decay: float = 0.9):
+    """Decode-time difficulty: EMA over per-token feature stats.
+    prev_alpha: (B,); new_embedding: (B, 1, D)."""
+    var = jnp.var(new_embedding.astype(jnp.float32), axis=(1, 2))
+    inst = jnp.clip(1.0 - jnp.exp(-var / (10 * cfg.var_scale)), 0.0, 1.0)
+    return decay * prev_alpha + (1.0 - decay) * inst
+
+
+# ---------------------------------------------------------------------------
+# Latent domain (diffusion) — DESIGN.md §3
+# ---------------------------------------------------------------------------
+
+def latent_difficulty(latents, signal_frac, cfg: DifficultyConfig = DEFAULT):
+    """latents: (B, H, W, C); signal_frac: (B,) = sqrt(ᾱ_t) ∈ [0,1].
+
+    Image-complexity of the current latent, scaled by how much signal is
+    present — high-noise (early) steps are easy, so α→0 there."""
+    base = image_difficulty(latents, cfg)
+    return jnp.clip(base * signal_frac, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# FLOPs of the estimator (paper §III.B overhead comparison)
+# ---------------------------------------------------------------------------
+
+def estimator_flops(h: int, w: int, c: int = 3) -> int:
+    """Per-image FLOPs of the difficulty estimator (conv MACs ×2 + pointwise).
+
+    Paper reports 78.9 KFLOPs for its configuration; RACENet-style adaptive
+    normalization costs 3.96 MFLOPs (50.3× more)."""
+    gray = h * w * (2 * c - 1) if c == 3 else h * w * c
+    hv, wv = h - 2, w - 2
+    sobel = 2 * hv * wv * 9 * 2            # two 3x3 convs
+    mag = hv * wv * 3                      # square, add, sqrt
+    edge_thresh = hv * wv + hv * wv        # compare + mean
+    var = 4 * h * w * c                    # mean + centered square + mean
+    lap = hv * wv * 9 * 2 + 2 * hv * wv    # conv + |·| + mean
+    return int(gray + sobel + mag + edge_thresh + var + lap + 16)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+def estimate(inputs, kind: str = "image", cfg: DifficultyConfig = DEFAULT,
+             use_kernel: bool = False, **kw):
+    """Unified entry point.  kind: image | tokens | latent."""
+    if kind == "image":
+        if use_kernel:
+            from repro.kernels.difficulty import ops as dops
+            return dops.image_difficulty(inputs, cfg)
+        return image_difficulty(inputs, cfg)
+    if kind == "tokens":
+        return token_difficulty(inputs, cfg)
+    if kind == "latent":
+        return latent_difficulty(inputs, kw["signal_frac"], cfg)
+    raise ValueError(kind)

@@ -1,0 +1,146 @@
+"""Batched DART routing — the glue between models and the DART policy.
+
+Execution modes (DESIGN.md §4.1):
+
+* ``train``          — all exits computed; Eq. 18 multi-exit loss.
+* ``serve-masked``   — single jitted program: full forward, then Alg. 1
+  selection on the stacked exit confidences.  Bitwise-identical decisions
+  to the sequential algorithm; compute is worst-case (used by the dry-run).
+* ``serve-compacted``— the stage-segmented engine in
+  ``repro.runtime.server`` (real FLOP savings via batch compaction).
+
+Confidence functionals per family:
+* classifiers — max softmax probability (paper), optionally via the fused
+  ``exit_gate`` Pallas kernel;
+* diffusion  — convergence of consecutive exit predictions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import thresholds as TH
+from repro.core import difficulty as DIFF
+
+
+@dataclasses.dataclass(frozen=True)
+class DartParams:
+    """Runtime routing parameters (learned offline, adapted online)."""
+    tau: Any                     # (E-1,) base thresholds
+    coef: Any                    # (E-1,) or (B, E-1) coefficients
+    beta_diff: float = 0.3
+    beta_opt: float = 0.5
+
+    @staticmethod
+    def default(n_exits: int, tau: float = 0.7):
+        return DartParams(tau=jnp.full((n_exits - 1,), tau),
+                          coef=jnp.ones((n_exits - 1,)))
+
+
+def confidence_from_logits(logits, use_kernel: bool = False):
+    """Max softmax probability per sample.  logits: (..., V) -> (...)."""
+    if use_kernel:
+        from repro.kernels.exit_gate import ops as gops
+        return gops.softmax_confidence(logits)[0]
+    return jnp.max(jax.nn.softmax(logits.astype(jnp.float32), axis=-1),
+                   axis=-1)
+
+
+def entropy_from_logits(logits):
+    """Shannon entropy (BranchyNet's criterion)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def diffusion_confidence(eps_stack):
+    """Exit confidence for diffusion models: convergence of consecutive
+    exit predictions.  eps_stack: (E, B, H, W, C) -> (E, B).
+
+    conf_i = 1 − ‖ε_i − ε_{i−1}‖ / (‖ε_i‖ + ‖ε_{i−1}‖); exit 0 has no
+    history → confidence 0 (never exits unless threshold is 0)."""
+    e = eps_stack.shape[0]
+    flat = eps_stack.reshape(e, eps_stack.shape[1], -1).astype(jnp.float32)
+    norms = jnp.linalg.norm(flat, axis=-1)
+    diffs = jnp.linalg.norm(flat[1:] - flat[:-1], axis=-1)
+    conf = 1.0 - diffs / (norms[1:] + norms[:-1] + 1e-8)
+    first = jnp.zeros((1, eps_stack.shape[1]), jnp.float32)
+    return jnp.concatenate([first, jnp.clip(conf, 0.0, 1.0)], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Masked-mode routing (Alg. 1 on stacked exits)
+# ---------------------------------------------------------------------------
+
+def route(conf_stack, alpha, dart: DartParams):
+    """Alg. 1: adapt thresholds (Eq. 19) and pick the first firing exit.
+
+    conf_stack: (E, B); alpha: (B,).  Returns dict with exit_idx, conf,
+    eff_thresholds."""
+    eff = TH.adapt_thresholds(jnp.asarray(dart.tau), jnp.asarray(dart.coef),
+                              alpha, dart.beta_diff)
+    exit_idx, conf = TH.select_exit(conf_stack, eff)
+    return {"exit_idx": exit_idx, "conf": conf, "eff_thresholds": eff,
+            "alpha": alpha}
+
+
+def classify_routed(exit_logits, images, dart: DartParams,
+                    dcfg: DIFF.DifficultyConfig = DIFF.DEFAULT,
+                    alpha=None, use_kernel: bool = False):
+    """Masked-mode DART classification.
+
+    exit_logits: (E, B, n_classes) — all exits computed.
+    Returns predictions taken from each sample's selected exit."""
+    conf_stack = confidence_from_logits(exit_logits, use_kernel)   # (E, B)
+    if alpha is None:
+        alpha = DIFF.image_difficulty(images, dcfg)
+    r = route(conf_stack, alpha, dart)
+    preds_all = jnp.argmax(exit_logits, axis=-1)                   # (E, B)
+    preds = jnp.take_along_axis(preds_all, r["exit_idx"][None], axis=0)[0]
+    return {**r, "pred": preds, "preds_all": preds_all,
+            "conf_stack": conf_stack}
+
+
+def diffusion_routed(eps_stack, latents, signal_frac, dart: DartParams,
+                     dcfg: DIFF.DifficultyConfig = DIFF.DEFAULT):
+    """Masked-mode DART for diffusion: pick the earliest converged exit."""
+    conf_stack = diffusion_confidence(eps_stack)
+    alpha = DIFF.latent_difficulty(latents, signal_frac, dcfg)
+    r = route(conf_stack, alpha, dart)
+    eps = jnp.take_along_axis(
+        eps_stack, r["exit_idx"][None, :, None, None, None], axis=0)[0]
+    return {**r, "eps": eps, "conf_stack": conf_stack}
+
+
+# ---------------------------------------------------------------------------
+# Multi-exit training loss for classifiers (paper Eq. 18)
+# ---------------------------------------------------------------------------
+
+def multi_exit_xent(exit_logits, labels, *, policy_weight: float = 0.01,
+                    exit_weights=None):
+    """L = Σ_i w_i·CE(y, ŷ_i) + λ·L_policy, w_i = i/N (Eq. 18).
+
+    exit_logits: (E, B, C); labels: (B,)."""
+    e = exit_logits.shape[0]
+    if exit_weights is None:
+        exit_weights = [(i + 1) / e for i in range(e)]
+    logp = jax.nn.log_softmax(exit_logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, labels[None, :, None], axis=-1)[..., 0]
+    ces = -jnp.mean(gold, axis=-1)                          # (E,)
+    total = jnp.sum(jnp.asarray(exit_weights) * ces)
+    # policy regularizer: penalize late-exit overuse by pushing early heads
+    # toward the final head's loss
+    policy = jnp.sum(jnp.maximum(ces[:-1] - ces[-1], 0.0)) if e > 1 else 0.0
+    return total + policy_weight * policy, {"ce_per_exit": ces}
+
+
+# ---------------------------------------------------------------------------
+# Routed-cost accounting
+# ---------------------------------------------------------------------------
+
+def routed_macs(exit_idx, cum_macs):
+    """Per-sample MACs actually spent under the routing (+ the difficulty
+    estimator overhead is added by callers via difficulty.estimator_flops)."""
+    return jnp.asarray(cum_macs)[exit_idx]

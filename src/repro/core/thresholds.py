@@ -1,0 +1,86 @@
+"""DART threshold machinery — Eq. 12 (quantile candidates), Eq. 19
+(difficulty-aware adaptation) and Algorithm 1 (adaptive exit decision).
+
+All functions are batched and jit-safe; the serving engine and the
+masked-mode dry-run step call straight into these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def candidate_thresholds(confidences, qs=None):
+    """Eq. 12: τ_i^cand = quantile(C_i, q), q ∈ {0.1, …, 0.9}.
+
+    confidences: (n_samples,) conf values observed at one exit on the
+    calibration set.  Returns (9,) candidates (host-side, numpy)."""
+    qs = np.arange(0.1, 0.91, 0.1) if qs is None else np.asarray(qs)
+    return np.quantile(np.asarray(confidences), qs)
+
+
+def adapt_thresholds(tau, coef, alpha, beta_diff):
+    """Eq. 19 + clamp: τ'_i = clip(c_i ⊙ τ_i + β_diff·α, 0, 1).
+
+    tau:   (E-1,) learned base thresholds
+    coef:  (E-1,) adaptive coefficients (or (B, E-1) per-sample/class)
+    alpha: (B,) per-input difficulty
+    Returns (B, E-1) effective thresholds."""
+    tau_adapted = coef * tau                       # element-wise (Alg.1 l.3)
+    if tau_adapted.ndim == 1:
+        tau_adapted = tau_adapted[None, :]
+    eff = tau_adapted + beta_diff * alpha[:, None]
+    return jnp.clip(eff, 0.0, 1.0)
+
+
+def select_exit(conf_stack, eff_thresholds):
+    """Algorithm 1 lines 4–12, batched.
+
+    conf_stack:      (E, B)   confidence at every exit (final included)
+    eff_thresholds:  (B, E-1) difficulty-aware thresholds
+    Returns (exit_idx (B,), exited_conf (B,)).  The final exit always
+    accepts (line 12)."""
+    e, b = conf_stack.shape
+    fires = conf_stack[:-1].T > eff_thresholds          # (B, E-1)
+    fires = jnp.concatenate(
+        [fires, jnp.ones((b, 1), bool)], axis=1)        # final always fires
+    exit_idx = jnp.argmax(fires, axis=1)                # first True
+    exited_conf = jnp.take_along_axis(conf_stack.T, exit_idx[:, None],
+                                      axis=1)[:, 0]
+    return exit_idx, exited_conf
+
+
+def exit_distribution(exit_idx, n_exits):
+    """π_i — empirical exit distribution (Eq. 10's π)."""
+    return jnp.mean(jax.nn.one_hot(exit_idx, n_exits), axis=0)
+
+
+def expected_cost(exit_idx, cum_costs):
+    """Mean computational cost under the routing (C_i = cumulative cost up
+    to exit i, e.g. MACs)."""
+    cum = jnp.asarray(cum_costs)
+    return jnp.mean(cum[exit_idx])
+
+
+def simulate_routing(conf_matrix, alpha, tau, coef, beta_diff):
+    """Vectorized Alg. 1 over a calibration set.
+
+    conf_matrix: (n, E); alpha: (n,); tau/coef: (E-1,).
+    Returns exit_idx (n,)."""
+    eff = adapt_thresholds(jnp.asarray(tau), jnp.asarray(coef),
+                           jnp.asarray(alpha), beta_diff)
+    return select_exit(jnp.asarray(conf_matrix).T, eff)[0]
+
+
+def objective(conf_matrix, alpha, correct_matrix, cum_costs, tau, coef,
+              beta_diff, beta_opt):
+    """Eq. 10: J(τ) = Σ_i π_i(τ)[A_i − β_opt·C_i], evaluated empirically.
+
+    correct_matrix: (n, E) 0/1 — was exit i's prediction correct.
+    cum_costs: (E,) normalized cumulative cost."""
+    idx = simulate_routing(conf_matrix, alpha, tau, coef, beta_diff)
+    acc = jnp.take_along_axis(jnp.asarray(correct_matrix), idx[:, None],
+                              axis=1)[:, 0]
+    cost = jnp.asarray(cum_costs)[idx]
+    return jnp.mean(acc - beta_opt * cost)

@@ -1,0 +1,105 @@
+"""Sharded, prefetching data pipeline.
+
+Design (DESIGN.md §4.6):
+* **stateless seeding** — the batch for step t is a pure function of
+  (dataset seed, t); restart-from-checkpoint replays identical batches and
+  elastic resizes only re-partition indices, never skip/duplicate them.
+* **host prefetch** — a daemon thread keeps ``prefetch`` batches ahead;
+  generation (numpy) overlaps with device compute.
+* **sharding** — batches are placed with a batch-sharded NamedSharding
+  when a mesh is given (each host would generate only its shard on a real
+  multi-host pod; here one host generates all and jax.device_put scatters).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.parallel.sharding import resolve_spec, LM_RULES
+
+
+def batch_indices(cfg: DatasetConfig, step: int, batch_size: int,
+                  split="train") -> np.ndarray:
+    """Deterministic shuffled epoch order, stateless in ``step``."""
+    n = cfg.n_train if split == "train" else cfg.n_eval
+    epoch = (step * batch_size) // n
+    rs = np.random.RandomState((cfg.seed + 17 * epoch) % (2**31 - 1))
+    perm = rs.permutation(n)
+    start = (step * batch_size) % n
+    idx = perm[start:start + batch_size]
+    if len(idx) < batch_size:                      # wrap into next epoch
+        rs2 = np.random.RandomState((cfg.seed + 17 * (epoch + 1)) % (2**31 - 1))
+        idx = np.concatenate([idx, rs2.permutation(n)[:batch_size - len(idx)]])
+    return idx
+
+
+class DataPipeline:
+    def __init__(self, cfg: DatasetConfig, batch_size: int, *, kind=None,
+                 split="train", seq_len=None, vocab=None, mesh=None,
+                 prefetch: int = 2, start_step: int = 0):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.kind = kind
+        self.split = split
+        self.seq_len = seq_len
+        self.vocab = vocab
+        self.mesh = mesh
+        self.step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _make(self, step: int):
+        idx = batch_indices(self.cfg, step, self.batch_size, self.split)
+        x, y = make_batch(self.cfg, idx, self.split, self.kind,
+                          self.seq_len, self.vocab)
+        return x, y
+
+    def _producer(self):
+        s = self.step
+        while not self._stop.is_set():
+            try:
+                self._q.put((s, self._make(s)), timeout=0.2)
+                s += 1
+            except queue.Full:
+                continue
+
+    def _place(self, arr):
+        if self.mesh is None:
+            return jax.numpy.asarray(arr)
+        spec = resolve_spec(arr.shape, ("batch",) + (None,) * (arr.ndim - 1),
+                            LM_RULES, self.mesh)
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def __next__(self):
+        step, (x, y) = self._q.get()
+        self.step = step + 1
+        return step, self._place(x), self._place(y)
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)
+
+
+def eval_batches(cfg: DatasetConfig, batch_size: int, *, kind=None,
+                 n: int | None = None, seq_len=None, vocab=None):
+    """Sequential eval split iterator (no prefetch thread)."""
+    n = n or cfg.n_eval
+    for start in range(0, n, batch_size):
+        idx = np.arange(start, min(start + batch_size, n))
+        yield make_batch(cfg, idx, "eval", kind, seq_len, vocab)

@@ -1,0 +1,90 @@
+"""Fused DART difficulty-estimator Pallas kernel (paper §II.A, Eqs. 1–8).
+
+One VMEM pass per image computes ALL difficulty statistics:
+grayscale → Sobel Gx/Gy → edge count, |Laplacian| sum, per-channel
+mean/variance, and the fused α — the image is read from HBM exactly once
+(the pure-jnp reference reads it five times: gray ×2, variance, and two
+convolutions, each materializing HBM-sized intermediates).
+
+TPU mapping: grid over the batch; each step holds one (H, W, C) image in
+VMEM (224²·3·4B = 602 KB; the 1024² generation shapes use the row-strip
+variant guard in ops.py).  All reductions run on the VPU; there is no MXU
+work — this kernel is bandwidth-bound by design, which is exactly why
+fusing the five passes into one is the win (≈5× HBM traffic reduction;
+see EXPERIMENTS.md §Repro-Overhead).
+
+Validated in interpret mode against ``ref.ref_components`` over a
+shape/dtype sweep (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(img_ref, out_ref, *, tau_edge, var_scale, grad_scale, w1, w2, w3):
+    img = img_ref[0].astype(jnp.float32)                 # (H, W, C)
+    h, w, c = img.shape
+    if c == 3:
+        gray = (0.299 * img[:, :, 0] + 0.587 * img[:, :, 1]
+                + 0.114 * img[:, :, 2])
+    else:
+        gray = jnp.mean(img, axis=-1)
+
+    # ---- Eq. 5–6: per-channel spatial variance, averaged over channels
+    mu = jnp.mean(img, axis=(0, 1), keepdims=True)       # (1, 1, C)
+    var = jnp.mean(jnp.square(img - mu))                 # 1/(CHW) Σ (·)²
+    a_var = 1.0 - jnp.exp(-var / var_scale)
+
+    # ---- shifted views for the two 3x3 stencils (valid region)
+    tl = gray[0:h - 2, 0:w - 2]
+    tc = gray[0:h - 2, 1:w - 1]
+    tr = gray[0:h - 2, 2:w]
+    ml = gray[1:h - 1, 0:w - 2]
+    mc = gray[1:h - 1, 1:w - 1]
+    mr = gray[1:h - 1, 2:w]
+    bl = gray[2:h, 0:w - 2]
+    bc = gray[2:h, 1:w - 1]
+    br = gray[2:h, 2:w]
+
+    # ---- Eqs. 1–4: Sobel magnitude > τ_edge
+    gx = (tr + 2.0 * mr + br) - (tl + 2.0 * ml + bl)
+    gy = (bl + 2.0 * bc + br) - (tl + 2.0 * tc + tr)
+    mag = jnp.sqrt(gx * gx + gy * gy)
+    a_edge = jnp.mean((mag > tau_edge).astype(jnp.float32))
+
+    # ---- Eq. 7: mean |Laplacian|
+    lap = tc + ml + mr + bc - 4.0 * mc
+    a_grad = 1.0 - jnp.exp(-jnp.mean(jnp.abs(lap)) / grad_scale)
+
+    # ---- Eq. 8 fusion
+    alpha = jnp.clip(w1 * a_edge + w2 * a_var + w3 * a_grad, 0.0, 1.0)
+    out_ref[0, 0] = a_edge
+    out_ref[0, 1] = a_var
+    out_ref[0, 2] = a_grad
+    out_ref[0, 3] = alpha
+
+
+def difficulty_pallas(images, *, tau_edge=0.1, var_scale=0.05,
+                      grad_scale=0.2, w1=0.4, w2=0.3, w3=0.3,
+                      interpret=True):
+    """images: (B, H, W, C) → (B, 4) = (α_edge, α_var, α_grad, α).
+
+    interpret=True executes the kernel body on CPU (this container);
+    on TPU hardware pass interpret=False for the compiled Mosaic kernel.
+    """
+    b, h, w, c = images.shape
+    kernel = functools.partial(_kernel, tau_edge=tau_edge,
+                               var_scale=var_scale, grad_scale=grad_scale,
+                               w1=w1, w2=w2, w3=w3)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, 4), jnp.float32),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        interpret=interpret,
+    )(images)

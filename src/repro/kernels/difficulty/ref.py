@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused difficulty kernel.
+
+This simply re-exports the reference implementation from
+``repro.core.difficulty`` (the kernel must match the paper's Eqs. 1–8
+exactly as implemented there)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.difficulty import (DifficultyConfig, edge_density,
+                                   pixel_variance, gradient_complexity,
+                                   fuse)
+
+
+def ref_components(images, *, tau_edge=0.1, var_scale=0.05, grad_scale=0.2,
+                   w1=0.4, w2=0.3, w3=0.3):
+    """(B, H, W, C) -> (B, 4) matching difficulty_pallas output layout."""
+    cfg = DifficultyConfig(w_edge=w1, w_variance=w2, w_gradient=w3,
+                           tau_edge=tau_edge, var_scale=var_scale,
+                           grad_scale=grad_scale)
+    e = edge_density(images, tau_edge)
+    v = pixel_variance(images, var_scale)
+    g = gradient_complexity(images, grad_scale)
+    a = fuse(e, v, g, cfg)
+    return jnp.stack([e, v, g, a], axis=1)

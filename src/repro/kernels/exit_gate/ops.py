@@ -1,0 +1,32 @@
+"""Jitted public wrapper for the fused exit-gate kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.exit_gate.exit_gate_kernel import exit_gate_pallas
+from repro.kernels.exit_gate import ref
+
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def exit_gate(logits, thresholds, interpret=True):
+    """Fused (conf, entropy, pred, fire).  logits (B, V), thresholds (B,)."""
+    b, v = logits.shape
+    if v * 4 * 2 <= VMEM_BUDGET_BYTES:
+        return exit_gate_pallas(logits, thresholds, interpret=interpret)
+    return ref.ref_exit_gate(logits, thresholds)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def softmax_confidence(logits, interpret=True):
+    """(conf, pred) without a threshold (gating done by the caller).
+    Accepts (..., V); flattens leading dims for the kernel grid."""
+    shape = logits.shape
+    flat = logits.reshape(-1, shape[-1])
+    conf, _, pred, _ = exit_gate(flat, jnp.ones((flat.shape[0],),
+                                                jnp.float32), interpret)
+    return conf.reshape(shape[:-1]), pred.reshape(shape[:-1])

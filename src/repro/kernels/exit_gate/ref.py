@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused exit-gate kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_exit_gate(logits, thresholds):
+    """logits: (B, V); thresholds: (B,).
+    Returns (conf, entropy, pred, fire) matching exit_gate_pallas."""
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    p = jnp.exp(logp)
+    conf = jnp.max(p, axis=-1)
+    ent = -jnp.sum(p * logp, axis=-1)
+    pred = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    fire = (conf > thresholds).astype(jnp.int32)
+    return conf, ent, pred, fire

@@ -1,0 +1,35 @@
+"""Production mesh definitions.
+
+``make_production_mesh()`` is a FUNCTION (importing this module never
+touches jax device state).  Single pod: 16×16 = 256 chips (TPU v5e pod);
+multi-pod: 2×16×16 = 512 chips with a leading "pod" axis whose collectives
+ride the (slower) inter-pod links — gradient compression
+(repro.parallel.compression) targets exactly that axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (fake or real) devices exist — used by
+    reduced-config tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for a in ("pod", "data"):
+        s *= mesh.shape.get(a, 1)
+    return s

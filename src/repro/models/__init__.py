@@ -1,0 +1,79 @@
+"""Model zoo: uniform access to every architecture family.
+
+``FAMILIES[family]`` exposes ``init``, ``forward`` (all-exits), and — for
+staged vision classifiers — the stem/stage/exit functions used by the DART
+serving engine.
+"""
+from __future__ import annotations
+
+from repro.models import (layers, batchnorm, moe, transformer_lm, vit, dit,
+                          convnext, resnet, cnn_zoo)
+
+from repro.models.transformer_lm import LMConfig
+from repro.models.vit import ViTConfig
+from repro.models.dit import DiTConfig
+from repro.models.convnext import ConvNeXtConfig
+from repro.models.resnet import ResNetConfig
+from repro.models.cnn_zoo import AlexNetConfig, VGGConfig, LeViTConfig
+
+
+class _Family:
+    def __init__(self, init, forward, *, stem=None, stage=None, exit_=None,
+                 n_stages=None, flops=None):
+        self.init = init
+        self.forward = forward
+        self.apply_stem = stem
+        self.apply_stage = stage
+        self.apply_exit = exit_
+        self.num_stages = n_stages
+        self.forward_flops = flops
+
+    @property
+    def staged(self) -> bool:
+        return self.apply_stage is not None
+
+
+FAMILIES = {
+    "lm": _Family(transformer_lm.lm_init, transformer_lm.lm_forward,
+                  flops=transformer_lm.lm_forward_flops),
+    "vit": _Family(vit.vit_init, vit.vit_forward, stem=vit.apply_stem,
+                   stage=vit.apply_stage, exit_=vit.apply_exit,
+                   n_stages=vit.num_stages, flops=vit.vit_forward_flops),
+    "dit": _Family(dit.dit_init, dit.dit_forward,
+                   flops=dit.dit_forward_flops),
+    "convnext": _Family(convnext.convnext_init, convnext.convnext_forward,
+                        stem=convnext.apply_stem, stage=convnext.apply_stage,
+                        exit_=convnext.apply_exit,
+                        n_stages=convnext.num_stages,
+                        flops=convnext.convnext_forward_flops),
+    "resnet": _Family(resnet.resnet_init, resnet.resnet_forward,
+                      stem=resnet.apply_stem, stage=resnet.apply_stage,
+                      exit_=resnet.apply_exit, n_stages=resnet.num_stages,
+                      flops=resnet.resnet_forward_flops),
+    "alexnet": _Family(cnn_zoo.alexnet_init, cnn_zoo.alexnet_forward,
+                       stem=cnn_zoo.alexnet_apply_stem,
+                       stage=cnn_zoo.alexnet_apply_stage,
+                       exit_=cnn_zoo.alexnet_apply_exit,
+                       n_stages=lambda cfg: 3),
+    "vgg": _Family(cnn_zoo.vgg_init, cnn_zoo.vgg_forward,
+                   stem=cnn_zoo.vgg_apply_stem,
+                   stage=cnn_zoo.vgg_apply_stage,
+                   exit_=cnn_zoo.vgg_apply_exit,
+                   n_stages=cnn_zoo.vgg_num_stages),
+    "levit": _Family(cnn_zoo.levit_init, cnn_zoo.levit_forward,
+                     stem=cnn_zoo.levit_apply_stem,
+                     stage=cnn_zoo.levit_apply_stage,
+                     exit_=cnn_zoo.levit_apply_exit,
+                     n_stages=lambda cfg: len(cfg.dims)),
+}
+
+
+def family_of(cfg) -> str:
+    return {LMConfig: "lm", ViTConfig: "vit", DiTConfig: "dit",
+            ConvNeXtConfig: "convnext", ResNetConfig: "resnet",
+            AlexNetConfig: "alexnet", VGGConfig: "vgg",
+            LeViTConfig: "levit"}[type(cfg)]
+
+
+def get_family(cfg) -> _Family:
+    return FAMILIES[family_of(cfg)]

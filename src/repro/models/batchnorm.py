@@ -1,0 +1,64 @@
+"""Functional BatchNorm with running statistics.
+
+Running stats are stored inside the param tree (axes-tagged with the
+``"_stats"`` logical axis marker on dim 0 so the optimizer can filter them
+out — see ``repro.optim.trainable_mask``).  Train-mode apply returns the
+EMA-updated stats; the trainer merges them back with ``merge_updates``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import Param
+
+STATS_AXIS = "_stats"
+
+
+def bn_init(dim, dtype):
+    return {
+        "scale": Param(jnp.ones((dim,), dtype), ("channels",)),
+        "bias": Param(jnp.zeros((dim,), dtype), ("channels",)),
+        "mean": Param(jnp.zeros((dim,), jnp.float32), (STATS_AXIS,)),
+        "var": Param(jnp.ones((dim,), jnp.float32), (STATS_AXIS,)),
+    }
+
+
+def bn_apply(p, x, *, train: bool, momentum=0.9, eps=1e-5, updates=None,
+             name=""):
+    """x: (..., C), normalized over all leading axes.
+
+    In train mode, batch statistics normalize and (name -> new stats) is
+    appended to ``updates`` (a dict supplied by the caller)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mu = jnp.mean(xf, axis=axes)
+        var = jnp.var(xf, axis=axes)
+        if updates is not None:
+            updates[name] = {
+                "mean": momentum * p["mean"] + (1 - momentum) * mu,
+                "var": momentum * p["var"] + (1 - momentum) * var,
+            }
+    else:
+        mu, var = p["mean"], p["var"]
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+def merge_updates(params, updates: dict):
+    """Merge {name: {"mean","var"}} back into the param tree.  Names are
+    '/'-joined key paths to the BN module dict."""
+    params = jax.tree.map(lambda x: x, params)  # shallow copy tree
+    for name, upd in updates.items():
+        node = params
+        parts = name.split("/")
+        for k in parts[:-1]:
+            node = node[int(k)] if isinstance(node, list) else node[k]
+        leaf_parent = node[int(parts[-1])] if isinstance(node, list) \
+            else node[parts[-1]]
+        leaf_parent["mean"] = upd["mean"]
+        leaf_parent["var"] = upd["var"]
+    return params

@@ -1,0 +1,417 @@
+"""The paper's CNN/ViT testbeds: AlexNet, VGG-16, LeViT.
+
+These are the architectures of Table I/II (MNIST / CIFAR-10 reproduction).
+Input-resolution flexible (28x28x1 MNIST, 32x32x3 CIFAR, 224x224x3
+ImageNet-style).  All expose the staged interface used by the DART serving
+engine (apply_stem / apply_stage / apply_exit / num_stages).
+
+Fidelity notes (DESIGN.md §2): AlexNet/VGG use their original norm-free
+convs; LeViT uses BatchNorm as in the paper, with a learned per-stage
+(H, N, N) attention-bias table standing in for LeViT's relative-position
+bias indexing (equivalent expressiveness at fixed resolution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.batchnorm import bn_init, bn_apply
+from repro.models.vit import exit_head_init, exit_head_apply
+from repro.parallel.sharding import Param
+
+
+# ---------------------------------------------------------------------------
+# AlexNet
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AlexNetConfig:
+    name: str = "alexnet"
+    img_res: int = 32
+    in_channels: int = 3
+    n_classes: int = 10
+    channels: tuple[int, ...] = (64, 192, 384, 256, 256)
+    fc_dims: tuple[int, ...] = (1024, 512)
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def n_exits(self) -> int:
+        return 3  # two BranchyNet-style branches + final
+
+    @property
+    def stage_names(self):
+        return ("conv12", "conv345", "fc")
+
+
+def _exit_conv_head_init(key, cin, n_classes, dt):
+    return {"conv": L.conv_init(L.rng(key, "conv"), 3, 3, cin, 64, dt),
+            "fc": L.linear_init(L.rng(key, "fc"), 64, n_classes, dt,
+                                axes=("embed", "classes"))}
+
+
+def _exit_conv_head(p, x):
+    h = jax.nn.relu(L.conv2d(p["conv"], x))
+    return L.linear(p["fc"], L.global_avg_pool(h))
+
+
+def alexnet_init(key, cfg: AlexNetConfig):
+    dt = cfg.param_dtype
+    c = cfg.channels
+    p = {
+        "conv1": L.conv_init(L.rng(key, "c1"), 3, 3, cfg.in_channels, c[0], dt),
+        "conv2": L.conv_init(L.rng(key, "c2"), 3, 3, c[0], c[1], dt),
+        "conv3": L.conv_init(L.rng(key, "c3"), 3, 3, c[1], c[2], dt),
+        "conv4": L.conv_init(L.rng(key, "c4"), 3, 3, c[2], c[3], dt),
+        "conv5": L.conv_init(L.rng(key, "c5"), 3, 3, c[3], c[4], dt),
+        "exit_heads": {
+            "0": _exit_conv_head_init(L.rng(key, "e0"), c[1], cfg.n_classes, dt),
+            "1": _exit_conv_head_init(L.rng(key, "e1"), c[4], cfg.n_classes, dt),
+        },
+    }
+    feat_res = cfg.img_res
+    for _ in range(3):                      # three SAME-padded stride-2 pools
+        feat_res = -(-feat_res // 2)
+    flat = c[4] * feat_res * feat_res
+    dims = (flat,) + cfg.fc_dims
+    p["fc"] = [L.linear_init(L.rng(key, f"fc{i}"), dims[i], dims[i + 1], dt,
+                             axes=("embed", "mlp"))
+               for i in range(len(cfg.fc_dims))]
+    p["head"] = L.linear_init(L.rng(key, "head"), dims[-1], cfg.n_classes,
+                              dt, axes=("embed", "classes"))
+    return p
+
+
+def alexnet_apply_stem(params, images, cfg: AlexNetConfig, **_):
+    return images.astype(cfg.compute_dtype)
+
+
+def alexnet_apply_stage(params, x, stage: int, cfg: AlexNetConfig, **_):
+    if stage == 0:
+        x = jax.nn.relu(L.conv2d(params["conv1"], x))
+        x = L.max_pool(x, 2, 2)
+        x = jax.nn.relu(L.conv2d(params["conv2"], x))
+        x = L.max_pool(x, 2, 2)
+        return x
+    if stage == 1:
+        x = jax.nn.relu(L.conv2d(params["conv3"], x))
+        x = jax.nn.relu(L.conv2d(params["conv4"], x))
+        x = jax.nn.relu(L.conv2d(params["conv5"], x))
+        return L.max_pool(x, 2, 2)
+    h = x.reshape(x.shape[0], -1)
+    for fp in params["fc"]:
+        h = jax.nn.relu(L.linear(fp, h))
+    return h
+
+
+def alexnet_apply_exit(params, x, stage: int, cfg: AlexNetConfig):
+    if stage == 2:
+        return L.linear(params["head"], x)
+    return _exit_conv_head(params["exit_heads"][str(stage)], x)
+
+
+def alexnet_forward(params, images, cfg: AlexNetConfig, *, mesh=None,
+                    train=False):
+    x = alexnet_apply_stem(params, images, cfg)
+    logits = []
+    for s in range(3):
+        x = alexnet_apply_stage(params, x, s, cfg)
+        logits.append(alexnet_apply_exit(params, x, s, cfg))
+    return {"exit_logits": jnp.stack(logits)}
+
+
+# ---------------------------------------------------------------------------
+# VGG-16
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VGGConfig:
+    name: str = "vgg16"
+    img_res: int = 32
+    in_channels: int = 3
+    n_classes: int = 10
+    blocks: tuple[tuple[int, int], ...] = ((64, 2), (128, 2), (256, 3),
+                                           (512, 3), (512, 3))
+    fc_dim: int = 512
+    exit_blocks: tuple[int, ...] = (1, 2, 3)
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def n_exits(self) -> int:
+        return len(self.exit_blocks) + 1
+
+
+def vgg_init(key, cfg: VGGConfig):
+    dt = cfg.param_dtype
+    p = {"blocks": [], "exit_heads": {}}
+    cin = cfg.in_channels
+    for b, (ch, depth) in enumerate(cfg.blocks):
+        convs = []
+        for d in range(depth):
+            convs.append(L.conv_init(L.rng(key, f"b{b}c{d}"), 3, 3, cin, ch, dt))
+            cin = ch
+        p["blocks"].append(convs)
+        if b in cfg.exit_blocks:
+            p["exit_heads"][str(b)] = _exit_conv_head_init(
+                L.rng(key, f"e{b}"), ch, cfg.n_classes, dt)
+    feat_res = cfg.img_res
+    for _ in range(len(cfg.blocks)):        # SAME-padded stride-2 pools
+        feat_res = -(-feat_res // 2)
+    flat = cfg.blocks[-1][0] * feat_res * feat_res
+    p["fc1"] = L.linear_init(L.rng(key, "fc1"), flat, cfg.fc_dim, dt,
+                             axes=("embed", "mlp"))
+    p["head"] = L.linear_init(L.rng(key, "head"), cfg.fc_dim, cfg.n_classes,
+                              dt, axes=("embed", "classes"))
+    return p
+
+
+def vgg_apply_stem(params, images, cfg: VGGConfig, **_):
+    return images.astype(cfg.compute_dtype)
+
+
+def _vgg_stage_blocks(cfg: VGGConfig):
+    """Stages aligned with exits: each stage ends at an exit block (or the
+    final classifier), so the staged serving engine always has a head."""
+    bounds = [b + 1 for b in cfg.exit_blocks] + [len(cfg.blocks)]
+    out, start = [], 0
+    for b in bounds:
+        out.append(tuple(range(start, b)))
+        start = b
+    return [s for s in out if s]
+
+
+def vgg_apply_stage(params, x, stage: int, cfg: VGGConfig, **_):
+    blocks = _vgg_stage_blocks(cfg)[stage]
+    for bi in blocks:
+        for cp in params["blocks"][bi]:
+            x = jax.nn.relu(L.conv2d(cp, x))
+        x = L.max_pool(x, 2, 2)
+    if stage == len(_vgg_stage_blocks(cfg)) - 1:
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(L.linear(params["fc1"], x))
+    return x
+
+
+def vgg_apply_exit(params, x, stage: int, cfg: VGGConfig):
+    stages = _vgg_stage_blocks(cfg)
+    if stage == len(stages) - 1:
+        return L.linear(params["head"], x)
+    return _exit_conv_head(params["exit_heads"][str(stages[stage][-1])], x)
+
+
+def vgg_num_stages(cfg: VGGConfig) -> int:
+    return len(_vgg_stage_blocks(cfg))
+
+
+def vgg_forward(params, images, cfg: VGGConfig, *, mesh=None, train=False):
+    x = vgg_apply_stem(params, images, cfg)
+    logits = []
+    for s in range(vgg_num_stages(cfg)):
+        x = vgg_apply_stage(params, x, s, cfg)
+        logits.append(vgg_apply_exit(params, x, s, cfg))
+    return {"exit_logits": jnp.stack(logits)}
+
+
+# ---------------------------------------------------------------------------
+# LeViT
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LeViTConfig:
+    name: str = "levit-128s"
+    img_res: int = 224
+    in_channels: int = 3
+    n_classes: int = 1000
+    dims: tuple[int, ...] = (128, 256, 384)
+    heads: tuple[int, ...] = (4, 6, 8)
+    depths: tuple[int, ...] = (2, 3, 4)
+    key_dim: int = 16
+    mlp_ratio: int = 2
+    stem_convs: int = 4                 # each stride 2 (224 -> 14)
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def n_exits(self) -> int:
+        return len(self.dims)           # exit after each stage; last = final
+
+    @property
+    def stem_res(self) -> int:
+        return self.img_res // (2 ** self.stem_convs)
+
+
+def _levit_attn_init(key, dim, heads, key_dim, n_tokens, dt, *, out_dim=None,
+                     q_tokens=None):
+    out_dim = out_dim or dim
+    v_dim = key_dim * 2
+    q_tokens = q_tokens or n_tokens
+    return {
+        "wq": Param(L.trunc_normal(L.rng(key, "wq"), (dim, heads, key_dim),
+                                   dt), ("embed", "heads", "head_dim")),
+        "wk": Param(L.trunc_normal(L.rng(key, "wk"), (dim, heads, key_dim),
+                                   dt), ("embed", "heads", "head_dim")),
+        "wv": Param(L.trunc_normal(L.rng(key, "wv"), (dim, heads, v_dim),
+                                   dt), ("embed", "heads", "head_dim")),
+        "wo": Param(L.trunc_normal(L.rng(key, "wo"), (heads, v_dim, out_dim),
+                                   dt), ("heads", "head_dim", "embed")),
+        "bias": Param(jnp.zeros((heads, q_tokens, n_tokens), dt),
+                      (None, None, None)),
+        "bn": bn_init(out_dim, dt),
+    }
+
+
+def _levit_attn(p, xq, xkv, *, train, updates, name):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale + p["bias"]
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(xq.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    o = jax.nn.hard_swish(jnp.einsum("bqhd,hdo->bqo", o, p["wo"]))
+    return bn_apply(p["bn"], o, train=train, updates=updates, name=name)
+
+
+def _levit_mlp_init(key, dim, ratio, dt):
+    return {"up": L.linear_init(L.rng(key, "up"), dim, dim * ratio, dt,
+                                axes=("embed", "mlp"), bias=False),
+            "bn_up": bn_init(dim * ratio, dt),
+            "down": L.linear_init(L.rng(key, "down"), dim * ratio, dim, dt,
+                                  axes=("mlp", "embed"), bias=False),
+            "bn_down": bn_init(dim, dt)}
+
+
+def _levit_mlp(p, x, *, train, updates, name):
+    h = jax.nn.hard_swish(bn_apply(p["bn_up"], L.linear(p["up"], x),
+                                   train=train, updates=updates,
+                                   name=f"{name}/bn_up"))
+    return bn_apply(p["bn_down"], L.linear(p["down"], h), train=train,
+                    updates=updates, name=f"{name}/bn_down")
+
+
+def levit_init(key, cfg: LeViTConfig):
+    dt = cfg.param_dtype
+    # stem: stride-2 convs ending at dims[0]
+    chans = [cfg.in_channels] + [max(8, cfg.dims[0] // (2 ** (cfg.stem_convs - 1 - i)))
+                                 for i in range(cfg.stem_convs - 1)] + [cfg.dims[0]]
+    stem = []
+    for i in range(cfg.stem_convs):
+        stem.append({"conv": L.conv_init(L.rng(key, f"stem{i}"), 3, 3,
+                                         chans[i], chans[i + 1], dt,
+                                         bias=False),
+                     "bn": bn_init(chans[i + 1], dt)})
+    p = {"stem": stem, "stages": [], "shrink": [], "exit_heads": {},
+         "head_bn": bn_init(cfg.dims[-1], dt),
+         "head": L.linear_init(L.rng(key, "head"), cfg.dims[-1],
+                               cfg.n_classes, dt, axes=("embed", "classes"))}
+    res = cfg.stem_res
+    for s, (dim, heads, depth) in enumerate(zip(cfg.dims, cfg.heads,
+                                                cfg.depths)):
+        n_tok = res * res
+        blocks = []
+        for b in range(depth):
+            blocks.append({
+                "attn": _levit_attn_init(L.rng(key, f"s{s}b{b}a"), dim, heads,
+                                         cfg.key_dim, n_tok, dt),
+                "mlp": _levit_mlp_init(L.rng(key, f"s{s}b{b}m"), dim,
+                                       cfg.mlp_ratio, dt),
+            })
+        p["stages"].append(blocks)
+        if s < len(cfg.dims) - 1:
+            q_tok = (res // 2) ** 2
+            p["shrink"].append({
+                "attn": _levit_attn_init(L.rng(key, f"shr{s}"), dim,
+                                         cfg.heads[s + 1], cfg.key_dim, n_tok,
+                                         dt, out_dim=cfg.dims[s + 1],
+                                         q_tokens=q_tok),
+                "mlp": _levit_mlp_init(L.rng(key, f"shrm{s}"),
+                                       cfg.dims[s + 1], cfg.mlp_ratio, dt),
+            })
+            res //= 2
+        if s < len(cfg.dims) - 1:
+            p["exit_heads"][str(s)] = exit_head_init(
+                L.rng(key, f"exit{s}"), dim, cfg.n_classes,
+                max(16, dim // 2), dt)
+    return p
+
+
+def levit_apply_stem(params, images, cfg: LeViTConfig, *, train=False,
+                     updates=None):
+    x = images.astype(cfg.compute_dtype)
+    for i, sp in enumerate(params["stem"]):
+        x = jax.nn.hard_swish(bn_apply(sp["bn"],
+                                       L.conv2d(sp["conv"], x, stride=2),
+                                       train=train, updates=updates,
+                                       name=f"stem/{i}/bn"))
+    b, h, w, c = x.shape
+    return x.reshape(b, h * w, c)
+
+
+def levit_apply_stage(params, x, stage: int, cfg: LeViTConfig, *,
+                      train=False, updates=None):
+    if stage > 0:
+        sh = params["shrink"][stage - 1]
+        n = x.shape[1]
+        res = int(n ** 0.5)
+        xg = x.reshape(x.shape[0], res, res, x.shape[-1])
+        xq = xg[:, ::2, ::2].reshape(x.shape[0], -1, x.shape[-1])
+        x = _levit_attn(sh["attn"], xq, x, train=train, updates=updates,
+                        name=f"shrink/{stage-1}/attn/bn")
+        x = x + _levit_mlp(sh["mlp"], x, train=train, updates=updates,
+                           name=f"shrink/{stage-1}/mlp")
+    for b, bp in enumerate(params["stages"][stage]):
+        x = x + _levit_attn(bp["attn"], x, x, train=train, updates=updates,
+                            name=f"stages/{stage}/{b}/attn/bn")
+        x = x + _levit_mlp(bp["mlp"], x, train=train, updates=updates,
+                           name=f"stages/{stage}/{b}/mlp")
+    return x
+
+
+def levit_apply_exit(params, x, stage: int, cfg: LeViTConfig, *,
+                     train=False, updates=None):
+    if stage == len(cfg.dims) - 1:
+        h = L.global_avg_pool(x)
+        h = bn_apply(params["head_bn"], h, train=train, updates=updates,
+                     name="head_bn")
+        return L.linear(params["head"], h)
+    return exit_head_apply(params["exit_heads"][str(stage)], x)
+
+
+def levit_forward(params, images, cfg: LeViTConfig, *, mesh=None,
+                  train=False):
+    updates: dict = {}
+    x = levit_apply_stem(params, images, cfg, train=train, updates=updates)
+    logits = []
+    for s in range(len(cfg.dims)):
+        x = levit_apply_stage(params, x, s, cfg, train=train, updates=updates)
+        logits.append(levit_apply_exit(params, x, s, cfg, train=train,
+                                       updates=updates))
+    return {"exit_logits": jnp.stack(logits), "bn_updates": updates}
+
+
+def levit_macs(cfg: LeViTConfig) -> int:
+    """Analytic MACs for Table II."""
+    res = cfg.img_res
+    macs = 0
+    chans = [cfg.in_channels] + [max(8, cfg.dims[0] // (2 ** (cfg.stem_convs - 1 - i)))
+                                 for i in range(cfg.stem_convs - 1)] + [cfg.dims[0]]
+    for i in range(cfg.stem_convs):
+        res //= 2
+        macs += 9 * chans[i] * chans[i + 1] * res * res
+    res = cfg.stem_res
+    for s, (dim, heads, depth) in enumerate(zip(cfg.dims, cfg.heads,
+                                                cfg.depths)):
+        n = res * res
+        kd, vd = cfg.key_dim, cfg.key_dim * 2
+        per = (n * dim * heads * (2 * kd + vd) + n * n * heads * (kd + vd)
+               + n * heads * vd * dim + 2 * n * dim * dim * cfg.mlp_ratio)
+        macs += depth * per
+        if s < len(cfg.dims) - 1:
+            res //= 2
+    macs += cfg.dims[-1] * cfg.n_classes
+    return int(macs)

@@ -1,0 +1,135 @@
+"""ConvNeXt with early exits after each stage.
+
+Assigned arch ``convnext-b``: depths 3-3-27-3, dims 128-256-512-1024.
+LayerNorm throughout (channel-last), 7x7 depthwise conv, 4x pointwise MLP,
+layer-scale gamma (init 1e-6).  Stochastic depth is omitted (inference-
+efficiency paper; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel.sharding import Param
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNeXtConfig:
+    name: str
+    depths: tuple[int, ...] = (3, 3, 27, 3)
+    dims: tuple[int, ...] = (128, 256, 512, 1024)
+    img_res: int = 224
+    n_classes: int = 1000
+    in_channels: int = 3
+    exit_stages: tuple[int, ...] = (0, 1, 2)
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def n_exits(self) -> int:
+        return len(self.exit_stages) + 1
+
+
+def _block_init(key, dim, dt):
+    return {
+        "dwconv": L.conv_init(L.rng(key, "dw"), 7, 7, dim, dim, dt,
+                              groups=dim),
+        "norm": L.layernorm_init(dim, dt),
+        "pw1": L.linear_init(L.rng(key, "pw1"), dim, 4 * dim, dt,
+                             axes=("embed", "mlp")),
+        "pw2": L.linear_init(L.rng(key, "pw2"), 4 * dim, dim, dt,
+                             axes=("mlp", "embed")),
+        "gamma": Param(jnp.full((dim,), 1e-6, dt), (None,)),
+    }
+
+
+def _block_apply(p, x, dim):
+    h = L.conv2d(p["dwconv"], x, groups=dim)
+    h = L.layernorm(p["norm"], h)
+    h = L.linear(p["pw2"], jax.nn.gelu(L.linear(p["pw1"], h)))
+    return x + p["gamma"] * h
+
+
+def convnext_init(key, cfg: ConvNeXtConfig):
+    dt = cfg.param_dtype
+    p = {
+        "stem": {"conv": L.conv_init(L.rng(key, "stem"), 4, 4,
+                                     cfg.in_channels, cfg.dims[0], dt),
+                 "norm": L.layernorm_init(cfg.dims[0], dt)},
+        "stages": [],
+        "downsample": [],
+        "final_norm": L.layernorm_init(cfg.dims[-1], dt),
+        "head": L.linear_init(L.rng(key, "head"), cfg.dims[-1],
+                              cfg.n_classes, dt, axes=("embed", "classes")),
+        "exit_heads": {},
+    }
+    for s, (depth, dim) in enumerate(zip(cfg.depths, cfg.dims)):
+        p["stages"].append([_block_init(L.rng(key, f"s{s}b{b}"), dim, dt)
+                            for b in range(depth)])
+        if s < len(cfg.depths) - 1:
+            p["downsample"].append({
+                "norm": L.layernorm_init(dim, dt),
+                "conv": L.conv_init(L.rng(key, f"ds{s}"), 2, 2, dim,
+                                    cfg.dims[s + 1], dt)})
+    for s in cfg.exit_stages:
+        p["exit_heads"][str(s)] = {
+            "norm": L.layernorm_init(cfg.dims[s], dt),
+            "fc": L.linear_init(L.rng(key, f"exit{s}"), cfg.dims[s],
+                                cfg.n_classes, dt, axes=("embed", "classes")),
+        }
+    return p
+
+
+def apply_stem(params, images, cfg: ConvNeXtConfig):
+    x = L.conv2d(params["stem"]["conv"], images.astype(cfg.compute_dtype),
+                 stride=4, padding="VALID")
+    return L.layernorm(params["stem"]["norm"], x)
+
+
+def apply_stage(params, x, stage: int, cfg: ConvNeXtConfig):
+    if stage > 0:
+        ds = params["downsample"][stage - 1]
+        x = L.conv2d(ds["conv"], L.layernorm(ds["norm"], x), stride=2,
+                     padding="VALID")
+    for bp in params["stages"][stage]:
+        x = _block_apply(bp, x, cfg.dims[stage])
+    return x
+
+
+def apply_exit(params, x, stage: int, cfg: ConvNeXtConfig):
+    h = L.global_avg_pool(x)
+    if stage == len(cfg.depths) - 1:
+        return L.linear(params["head"], L.layernorm(params["final_norm"], h))
+    ep = params["exit_heads"][str(stage)]
+    return L.linear(ep["fc"], L.layernorm(ep["norm"], h))
+
+
+def num_stages(cfg: ConvNeXtConfig) -> int:
+    return len(cfg.depths)
+
+
+def convnext_forward(params, images, cfg: ConvNeXtConfig, *, mesh=None,
+                     train=False):
+    x = apply_stem(params, images, cfg)
+    logits = []
+    for s in range(num_stages(cfg)):
+        x = apply_stage(params, x, s, cfg)
+        if s in cfg.exit_stages or s == num_stages(cfg) - 1:
+            logits.append(apply_exit(params, x, s, cfg))
+    return {"exit_logits": jnp.stack(logits)}
+
+
+def convnext_forward_flops(cfg: ConvNeXtConfig, batch: int) -> int:
+    res = cfg.img_res // 4
+    fl = 2 * (cfg.img_res // 4) ** 2 * 16 * cfg.in_channels * cfg.dims[0]
+    for s, (depth, dim) in enumerate(zip(cfg.depths, cfg.dims)):
+        if s > 0:
+            res //= 2
+            fl += 2 * res * res * 4 * cfg.dims[s - 1] * dim
+        per = 2 * res * res * (49 * dim + 8 * dim * dim)
+        fl += depth * per
+    return int(batch * fl)

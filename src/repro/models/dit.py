@@ -1,0 +1,242 @@
+"""Diffusion Transformer (DiT) with early-exit noise heads.
+
+Assigned archs ``dit-s2`` / ``dit-xl2`` (Peebles & Xie, arXiv:2212.09748).
+Operates in latent space: input = (B, R/8, R/8, 4) latents, patchified at
+``patch``.  adaLN-Zero conditioning on (timestep, class).
+
+DART adaptation (DESIGN.md §3): exit heads are intermediate FinalLayer
+replicas predicting the noise; exit "confidence" is the *convergence* of
+consecutive exit predictions (small relative residual => exit), computed
+by ``repro.core.routing.diffusion_confidence``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel.sharding import Param
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    name: str
+    img_res: int = 256                    # pixel resolution (latent = /8)
+    patch: int = 2
+    n_layers: int = 12
+    d_model: int = 384
+    n_heads: int = 6
+    n_classes: int = 1000
+    in_channels: int = 4                  # latent channels
+    learn_sigma: bool = True
+    exit_layers: tuple[int, ...] = ()
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = False
+
+    @property
+    def latent_res(self) -> int:
+        return self.img_res // 8
+
+    @property
+    def n_tokens(self) -> int:
+        return (self.latent_res // self.patch) ** 2
+
+    @property
+    def out_channels(self) -> int:
+        return self.in_channels * (2 if self.learn_sigma else 1)
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def n_exits(self) -> int:
+        return len(self.exit_layers) + 1
+
+
+def timestep_embedding(t, dim, max_period=10000.0):
+    """(B,) int/float timesteps -> (B, dim) sinusoidal features."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def _block_init(key, cfg: DiTConfig):
+    dt = cfg.param_dtype
+    return {
+        "norm1": L.layernorm_init(cfg.d_model, dt),
+        "attn": L.mha_init(L.rng(key, "attn"), cfg.d_model, cfg.n_heads, dt),
+        "norm2": L.layernorm_init(cfg.d_model, dt),
+        "mlp": L.mlp_init(L.rng(key, "mlp"), cfg.d_model, cfg.d_ff, dt),
+        # adaLN-Zero: 6 modulation vectors; zero-init final projection
+        "ada": {"w": Param(jnp.zeros((cfg.d_model, 6 * cfg.d_model), dt),
+                           ("embed", "mlp")),
+                "b": Param(jnp.zeros((6 * cfg.d_model,), dt), (None,))},
+    }
+
+
+def _final_layer_init(key, cfg: DiTConfig):
+    dt = cfg.param_dtype
+    out = cfg.patch * cfg.patch * cfg.out_channels
+    return {
+        "norm": L.layernorm_init(cfg.d_model, dt),
+        "ada": {"w": Param(jnp.zeros((cfg.d_model, 2 * cfg.d_model), dt),
+                           ("embed", "mlp")),
+                "b": Param(jnp.zeros((2 * cfg.d_model,), dt), (None,))},
+        "proj": {"w": Param(jnp.zeros((cfg.d_model, out), dt),
+                            ("embed", None)),
+                 "b": Param(jnp.zeros((out,), dt), (None,))},
+    }
+
+
+def dit_init(key, cfg: DiTConfig):
+    dt = cfg.param_dtype
+    grid = cfg.latent_res // cfg.patch
+    p = {
+        "patch": L.patch_embed_init(L.rng(key, "patch"), cfg.patch,
+                                    cfg.in_channels, cfg.d_model, dt),
+        "pos": Param(L.sincos_pos_embed_2d(grid, grid, cfg.d_model, dt),
+                     ("seq", "embed")),
+        "t_mlp": {
+            "fc1": L.linear_init(L.rng(key, "t1"), 256, cfg.d_model, dt,
+                                 axes=("embed", "mlp")),
+            "fc2": L.linear_init(L.rng(key, "t2"), cfg.d_model, cfg.d_model,
+                                 dt, axes=("mlp", "embed")),
+        },
+        "y_embed": L.embed_init(L.rng(key, "y"), cfg.n_classes + 1,
+                                cfg.d_model, dt),
+        "blocks": [_block_init(L.rng(key, f"b{i}"), cfg)
+                   for i in range(cfg.n_layers)],
+        "final": _final_layer_init(L.rng(key, "final"), cfg),
+        "exit_heads": {str(i): _final_layer_init(L.rng(key, f"exit{i}"), cfg)
+                       for i in cfg.exit_layers},
+    }
+    return p
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None, :]) + shift[:, None, :]
+
+
+def _block_apply(p, x, c):
+    mod = L.linear(p["ada"], jax.nn.silu(c))
+    s1, sc1, g1, s2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+    h = _modulate(L.layernorm(p["norm1"], x), s1, sc1)
+    x = x + g1[:, None, :] * L.mha_apply(p["attn"], h)
+    h = _modulate(L.layernorm(p["norm2"], x), s2, sc2)
+    x = x + g2[:, None, :] * L.mlp(p["mlp"], h)
+    return x
+
+
+def _final_apply(p, x, c, cfg: DiTConfig):
+    mod = L.linear(p["ada"], jax.nn.silu(c))
+    s, sc = jnp.split(mod, 2, axis=-1)
+    h = _modulate(L.layernorm(p["norm"], x), s, sc)
+    out = L.linear(p["proj"], h)                        # (B, N, p*p*Cout)
+    return unpatchify(out, cfg)
+
+
+def unpatchify(x, cfg: DiTConfig):
+    b, n, _ = x.shape
+    g = cfg.latent_res // cfg.patch
+    pch, c = cfg.patch, cfg.out_channels
+    x = x.reshape(b, g, g, pch, pch, c)
+    x = jnp.einsum("bhwpqc->bhpwqc", x)
+    return x.reshape(b, g * pch, g * pch, c)
+
+
+def conditioning(params, t, y, cfg: DiTConfig):
+    te = timestep_embedding(t, 256).astype(cfg.compute_dtype)
+    te = L.linear(params["t_mlp"]["fc2"],
+                  jax.nn.silu(L.linear(params["t_mlp"]["fc1"], te)))
+    ye = L.embed(params["y_embed"], y).astype(cfg.compute_dtype)
+    return te + ye
+
+
+def dit_forward(params, latents, t, y, cfg: DiTConfig, *, mesh=None,
+                collect_exits=True):
+    """Returns {"exit_eps": list[(B, H, W, Cout)] — one per exit + final}."""
+    c = conditioning(params, t, y, cfg)
+    x = L.patch_embed(params["patch"], latents.astype(cfg.compute_dtype),
+                      cfg.patch)
+    x = x + params["pos"].astype(cfg.compute_dtype)
+    blk = jax.checkpoint(_block_apply) if cfg.remat else _block_apply
+    outs = []
+    for i in range(cfg.n_layers):
+        x = blk(params["blocks"][i], x, c)
+        if collect_exits and i in cfg.exit_layers:
+            outs.append(_final_apply(params["exit_heads"][str(i)], x, c, cfg))
+    outs.append(_final_apply(params["final"], x, c, cfg))
+    return {"exit_eps": outs}
+
+
+def dit_forward_flops(cfg: DiTConfig, batch: int) -> int:
+    n, d = cfg.n_tokens, cfg.d_model
+    per_block = (2 * n * d * d * 4            # qkvo
+                 + 2 * 2 * n * n * d          # attention
+                 + 2 * n * d * cfg.d_ff * 2   # mlp
+                 + 2 * d * 6 * d)             # adaLN
+    stem = 2 * n * d * (cfg.patch ** 2 * cfg.in_channels)
+    fin = cfg.n_exits * (2 * n * d * cfg.patch ** 2 * cfg.out_channels
+                         + 2 * d * 2 * d)
+    return int(batch * (stem + cfg.n_layers * per_block + fin))
+
+
+# ---------------------------------------------------------------------------
+# Diffusion process (DDPM cosine schedule + DDIM sampling)
+# ---------------------------------------------------------------------------
+
+def cosine_alpha_bar(n_steps=1000, s=0.008):
+    t = jnp.arange(n_steps + 1, dtype=jnp.float32) / n_steps
+    f = jnp.cos((t + s) / (1 + s) * math.pi / 2) ** 2
+    return f / f[0]
+
+
+def diffusion_loss(params, cfg: DiTConfig, x0, y, key, *, mesh=None,
+                   exit_weights=None, n_steps=1000):
+    """Paper Eq. 18 adapted to diffusion: Σ_i w_i · MSE(ε, ε̂_i)."""
+    b = x0.shape[0]
+    abar = cosine_alpha_bar(n_steps)
+    t = jax.random.randint(L.rng(key, "t"), (b,), 0, n_steps)
+    eps = jax.random.normal(L.rng(key, "eps"), x0.shape, x0.dtype)
+    at = abar[t][:, None, None, None]
+    xt = jnp.sqrt(at) * x0 + jnp.sqrt(1 - at) * eps
+    out = dit_forward(params, xt, t, y, cfg, mesh=mesh)
+    n = len(out["exit_eps"])
+    if exit_weights is None:
+        exit_weights = [(i + 1) / n for i in range(n)]
+    total = jnp.zeros((), jnp.float32)
+    per_exit = []
+    for w, pred in zip(exit_weights, out["exit_eps"]):
+        eps_hat = pred[..., :cfg.in_channels]
+        mse = jnp.mean(jnp.square(eps_hat.astype(jnp.float32)
+                                  - eps.astype(jnp.float32)))
+        per_exit.append(mse)
+        total = total + w * mse
+    return total, {"mse_per_exit": per_exit}
+
+
+def ddim_step(params, cfg: DiTConfig, xt, t, t_prev, y, *, mesh=None,
+              n_steps=1000, exit_select=None):
+    """One DDIM update.  ``exit_select``: optional (B,) int exit indices from
+    the DART policy — the engine picks which exit's ε̂ to use per sample."""
+    abar = cosine_alpha_bar(n_steps)
+    out = dit_forward(params, xt, t, y, cfg, mesh=mesh)
+    eps_stack = jnp.stack([e[..., :cfg.in_channels]
+                           for e in out["exit_eps"]])     # (E, B, H, W, C)
+    if exit_select is None:
+        eps_hat = eps_stack[-1]
+    else:
+        eps_hat = jnp.take_along_axis(
+            eps_stack, exit_select[None, :, None, None, None], axis=0)[0]
+    at = abar[t][:, None, None, None]
+    ap = abar[t_prev][:, None, None, None]
+    x0_hat = (xt - jnp.sqrt(1 - at) * eps_hat) / jnp.sqrt(at)
+    return jnp.sqrt(ap) * x0_hat + jnp.sqrt(1 - ap) * eps_hat, eps_stack

@@ -1,0 +1,731 @@
+"""LLaMA-family language models with early-exit heads.
+
+Covers the four assigned LM architectures:
+
+* ``tinyllama-1.1b``  — dense, GQA (32 q / 4 kv heads)
+* ``internlm2-20b``   — dense, GQA (48 q / 8 kv heads)
+* ``granite-moe``     — MoE every layer (40 experts, top-8), GQA
+* ``deepseek-v3``     — MLA attention, 1 shared + 256 routed top-8 MoE,
+                        first 3 layers dense, optional MTP head
+
+Early exit (the paper's subject) is realized as per-layer exit heads
+(RMSNorm + tied unembedding, DeeBERT/CALM lineage — see DESIGN.md §3).
+The model itself stays DART-agnostic: it returns logits for every exit;
+``repro.core.routing`` applies Alg. 1 gating on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, moe_init, moe_apply, moe_flops
+from repro.parallel.sharding import Param
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                              # dense FFN hidden dim
+    vocab: int
+    head_dim: int | None = None
+    attn_kind: str = "gqa"                 # "gqa" | "mla"
+    moe: MoEConfig | None = None
+    moe_ep_mode: str = "ep"
+    n_dense_layers: int = 0                # leading dense layers (DeepSeek: 3)
+    exit_layers: tuple[int, ...] = ()      # exit after these layer indices
+    max_seq: int = 4096
+    rope_theta: float = 10000.0
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    tie_embeddings: bool = True
+    remat: bool = True
+    act_shard: str = "none"                # "none" | "sp" (Megatron-SP)
+    attn_chunked: bool = False
+    q_chunk: int = 1024
+    kv_chunk: int = 2048
+    mtp: bool = False                      # DeepSeek multi-token prediction
+    # Segment-scan: stack the homogeneous (MoE) layers between exit
+    # boundaries and run them under lax.scan.  Keeps HLO size O(#segments)
+    # instead of O(#layers) — required to compile the 61-layer DeepSeek
+    # train step in this container.  cost_analysis counts each scan body
+    # once; the dry-run compiles a single-layer probe and extrapolates
+    # (launch/dryrun.py).  Train/prefill paths only.
+    layer_scan: bool = False
+    moe_dispatch: str = "ar"               # "ar" | "a2a" (token-sharded EP)
+    # MLA dims (DeepSeek-V3 defaults)
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_exits(self) -> int:
+        return len(self.exit_layers) + 1   # + final head
+
+    def layer_is_moe(self, i: int) -> bool:
+        return self.moe is not None and i >= self.n_dense_layers
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: LMConfig, i: int):
+    dt = cfg.param_dtype
+    p = {"attn_norm": L.rmsnorm_init(cfg.d_model, dt),
+         "ffn_norm": L.rmsnorm_init(cfg.d_model, dt)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = L.mla_init(L.rng(key, "attn"), cfg.d_model, cfg.n_heads,
+                               dt, q_lora_rank=cfg.q_lora_rank,
+                               kv_lora_rank=cfg.kv_lora_rank,
+                               qk_nope_dim=cfg.qk_nope_dim,
+                               qk_rope_dim=cfg.qk_rope_dim,
+                               v_head_dim=cfg.v_head_dim)
+    else:
+        p["attn"] = L.gqa_init(L.rng(key, "attn"), cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.hd, dt)
+    if cfg.layer_is_moe(i):
+        p["moe"] = moe_init(L.rng(key, "moe"), cfg.d_model, cfg.moe, dt,
+                            ep_mode=cfg.moe_ep_mode)
+    else:
+        p["ffn"] = L.swiglu_init(L.rng(key, "ffn"), cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def scan_segments(cfg: LMConfig) -> list[tuple[int, int]]:
+    """[start, end) layer ranges of the scanned segments (exit boundaries
+    split them so exits land between scans)."""
+    bounds = [cfg.n_dense_layers]
+    for e in sorted(cfg.exit_layers):
+        if e + 1 > cfg.n_dense_layers:
+            bounds.append(e + 1)
+    bounds.append(cfg.n_layers)
+    return [(a, b) for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
+
+
+def _stack_params(trees):
+    """Stack a list of identical Param trees along a new leading axis."""
+    from repro.parallel.sharding import unzip, Param as Pm
+    values = [unzip(t)[0] for t in trees]
+    axes = unzip(trees[0])[1]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *values)
+    return jax.tree.map(
+        lambda v, a: Pm(v, (None,) + tuple(a)), stacked, axes,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict))
+
+
+def lm_init(key, cfg: LMConfig):
+    dt = cfg.param_dtype
+    if cfg.layer_scan:
+        segs = scan_segments(cfg)
+        p = {
+            "embed": L.embed_init(L.rng(key, "embed"), cfg.vocab,
+                                  cfg.d_model, dt),
+            "layers": [_layer_init(L.rng(key, f"layer{i}"), cfg, i)
+                       for i in range(cfg.n_dense_layers)],
+            "segments": [
+                _stack_params([_layer_init(L.rng(key, f"layer{i}"), cfg, i)
+                               for i in range(a, b)]) for a, b in segs],
+            "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+            "exit_heads": {str(i): {"norm": L.rmsnorm_init(cfg.d_model, dt)}
+                           for i in cfg.exit_layers},
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = Param(L.trunc_normal(L.rng(key, "unembed"),
+                                                (cfg.vocab, cfg.d_model), dt,
+                                                std=0.02), ("vocab", "embed"))
+        if cfg.mtp:
+            p["mtp"] = {"proj": L.linear_init(L.rng(key, "mtp_proj"),
+                                              2 * cfg.d_model, cfg.d_model,
+                                              dt, axes=("embed", "embed"),
+                                              bias=False),
+                        "block": _layer_init(L.rng(key, "mtp_block"), cfg,
+                                             cfg.n_layers),
+                        "norm": L.rmsnorm_init(cfg.d_model, dt)}
+        return p
+    p = {
+        "embed": L.embed_init(L.rng(key, "embed"), cfg.vocab, cfg.d_model, dt),
+        "layers": [_layer_init(L.rng(key, f"layer{i}"), cfg, i)
+                   for i in range(cfg.n_layers)],
+        "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "exit_heads": {str(i): {"norm": L.rmsnorm_init(cfg.d_model, dt)}
+                       for i in cfg.exit_layers},
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = Param(L.trunc_normal(L.rng(key, "unembed"),
+                                            (cfg.vocab, cfg.d_model), dt,
+                                            std=0.02), ("vocab", "embed"))
+    if cfg.mtp:
+        p["mtp"] = {"proj": L.linear_init(L.rng(key, "mtp_proj"),
+                                          2 * cfg.d_model, cfg.d_model, dt,
+                                          axes=("embed", "embed"), bias=False),
+                    "block": _layer_init(L.rng(key, "mtp_block"), cfg,
+                                         cfg.n_layers),
+                    "norm": L.rmsnorm_init(cfg.d_model, dt)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _dp_axes(mesh):
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _constraint(x, mesh, spec_entries):
+    if mesh is None:
+        return x
+    spec = P(*spec_entries)
+    return lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def _residual_constraint(x, cfg, mesh):
+    if mesh is None:
+        return x
+    dp = _dp_axes(mesh)
+    batch_ok = x.shape[0] % max(math.prod(mesh.shape[a] for a in dp), 1) == 0
+    bspec = dp if batch_ok and len(dp) > 0 else None
+    if cfg.act_shard == "sp" and x.shape[1] % mesh.shape.get("model", 1) == 0 \
+            and x.shape[1] > 1:
+        return _constraint(x, mesh, (bspec, "model", None))
+    return _constraint(x, mesh, (bspec, None, None))
+
+
+def _layer_apply(p, x, cfg: LMConfig, i: int, cos, sin, mesh):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(p["attn_norm"], x)
+    if cfg.attn_kind == "mla":
+        a = L.mla_apply(p["attn"], h, cos, sin, causal=True,
+                        chunked=cfg.attn_chunked, q_chunk=cfg.q_chunk,
+                        kv_chunk=cfg.kv_chunk)
+    else:
+        a = L.gqa_apply(p["attn"], h, cos, sin, causal=True,
+                        chunked=cfg.attn_chunked, q_chunk=cfg.q_chunk,
+                        kv_chunk=cfg.kv_chunk)
+    x = x + a
+    x = _residual_constraint(x, cfg, mesh)
+    h = L.rmsnorm(p["ffn_norm"], x)
+    if cfg.layer_is_moe(i):
+        f, aux = moe_apply(p["moe"], h, cfg.moe, mesh=mesh,
+                           dp_axes=_dp_axes(mesh), ep_mode=cfg.moe_ep_mode,
+                           dispatch=cfg.moe_dispatch)
+    else:
+        f = L.swiglu(p["ffn"], h)
+    x = x + f
+    x = _residual_constraint(x, cfg, mesh)
+    return x, aux
+
+
+def _unembed_table(params, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"]
+    return params["unembed"]
+
+
+def exit_logits(params, cfg: LMConfig, h, exit_name: str):
+    """Logits for one exit head (or "final")."""
+    if exit_name == "final":
+        hn = L.rmsnorm(params["final_norm"], h)
+    else:
+        hn = L.rmsnorm(params["exit_heads"][exit_name]["norm"], h)
+    return jnp.einsum("...d,vd->...v", hn, _unembed_table(params, cfg))
+
+
+def _segment_scan(stacked, x, cfg: LMConfig, cos, sin, mesh):
+    """Run one stacked segment of homogeneous MoE layers under lax.scan."""
+    def body(h, lp):
+        h, aux = _layer_apply(lp, h, cfg, cfg.n_dense_layers, cos, sin,
+                              mesh)
+        return h, aux
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = lax.scan(body, x, stacked)
+    return x, jnp.sum(auxs)
+
+
+def lm_forward(params, token_ids, cfg: LMConfig, *, mesh=None,
+               collect_exits=True):
+    """Full forward.  Returns dict with:
+       ``exit_hidden``  — list of (B, S, D), one per early exit + final
+       ``aux_loss``     — MoE load-balance scalar
+    Exit *logits* are computed lazily by the loss/gating (vocab projections
+    are the expensive part; chunked there)."""
+    b, s = token_ids.shape
+    cos, sin = L.rope_freqs(
+        cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
+        max(s, cfg.max_seq), cfg.rope_theta)
+    x = L.embed(params["embed"], token_ids).astype(cfg.compute_dtype)
+    x = _residual_constraint(x, cfg, mesh)
+    aux_total = jnp.zeros((), jnp.float32)
+    exit_hidden = []
+    layer_fn = _layer_apply
+    if cfg.remat:
+        layer_fn = jax.checkpoint(_layer_apply, static_argnums=(2, 3, 6),
+                                  prevent_cse=False)
+    if cfg.layer_scan:
+        for i in range(cfg.n_dense_layers):
+            x, aux = layer_fn(params["layers"][i], x, cfg, i, cos, sin,
+                              mesh)
+            aux_total = aux_total + aux
+            if collect_exits and i in cfg.exit_layers:
+                exit_hidden.append(x)
+        segs = scan_segments(cfg)
+        for k, (a, bnd) in enumerate(segs):
+            x, aux = _segment_scan(params["segments"][k], x, cfg, cos, sin,
+                                   mesh)
+            aux_total = aux_total + aux
+            if collect_exits and (bnd - 1) in cfg.exit_layers:
+                exit_hidden.append(x)
+        exit_hidden.append(x)
+        return {"exit_hidden": exit_hidden, "aux_loss": aux_total,
+                "final_hidden": x}
+    for i in range(cfg.n_layers):
+        x, aux = layer_fn(params["layers"][i], x, cfg, i, cos, sin, mesh)
+        aux_total = aux_total + aux
+        if collect_exits and i in cfg.exit_layers:
+            exit_hidden.append(x)
+    exit_hidden.append(x)
+    return {"exit_hidden": exit_hidden, "aux_loss": aux_total,
+            "final_hidden": x}
+
+
+def chunked_xent(params, cfg: LMConfig, h, labels, exit_name: str,
+                 n_chunks: int = 8):
+    """Cross-entropy against ``labels`` with the vocab projection computed
+    over sequence chunks (keeps per-chunk logits in memory, not the full
+    (B,S,V) tensor).  Python-loop chunking keeps cost_analysis exact."""
+    b, s, d = h.shape
+    n_chunks = min(n_chunks, s)
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+    total = jnp.zeros((), jnp.float32)
+    table = _unembed_table(params, cfg)
+    if exit_name == "final":
+        norm = params["final_norm"]
+    else:
+        norm = params["exit_heads"][exit_name]["norm"]
+    for c in range(n_chunks):
+        hc = L.rmsnorm(norm, h[:, c * cs:(c + 1) * cs])
+        logits = jnp.einsum("bsd,vd->bsv", hc, table).astype(jnp.float32)
+        lab = labels[:, c * cs:(c + 1) * cs]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via a row-gather of the (small) unembedding rows —
+        # NEVER take_along_axis on the vocab-sharded logits (that would
+        # all-gather the full (B,S,V) tensor across the model axis)
+        gold_rows = jnp.take(table, lab, axis=0).astype(jnp.float32)
+        gold = jnp.einsum("bsd,bsd->bs", hc.astype(jnp.float32), gold_rows)
+        total = total + jnp.sum(lse - gold)
+    return total / (b * s)
+
+
+def lm_multi_exit_loss(params, token_ids, labels, cfg: LMConfig, *,
+                       mesh=None, policy_weight: float = 0.01,
+                       xent_chunks: int = 8):
+    """Paper Eq. 18: L = Σ_i w_i·CE(y, ŷ_i) + λ·L_policy, w_i = i/N.
+
+    L_policy (efficient-exit regularizer) here = mean predicted depth proxy:
+    encourage earlier exits to be confident by penalizing the gap between
+    early-exit CE and final CE (pushes probability mass to early heads).
+    """
+    out = lm_forward(params, token_ids, cfg, mesh=mesh)
+    n = cfg.n_exits
+    names = [str(i) for i in cfg.exit_layers] + ["final"]
+    total = jnp.zeros((), jnp.float32)
+    ces = []
+    for rank, (name, h) in enumerate(zip(names, out["exit_hidden"]), start=1):
+        ce = chunked_xent(params, cfg, h, labels, name, xent_chunks)
+        ces.append(ce)
+        total = total + (rank / n) * ce
+    # policy loss: overuse of later exits == early heads being much worse
+    policy = sum(jnp.maximum(ce - ces[-1], 0.0) for ce in ces[:-1]) \
+        if len(ces) > 1 else jnp.zeros((), jnp.float32)
+    total = total + policy_weight * policy + out["aux_loss"]
+    if cfg.mtp:
+        mtp = mtp_loss(params, token_ids, labels, out["final_hidden"], cfg,
+                       mesh=mesh, xent_chunks=xent_chunks)
+        total = total + 0.3 * mtp  # DeepSeek-V3 MTP weight
+        return total, {"ce_per_exit": ces, "aux_loss": out["aux_loss"],
+                       "mtp_loss": mtp}
+    return total, {"ce_per_exit": ces, "aux_loss": out["aux_loss"]}
+
+
+def mtp_loss(params, token_ids, labels, final_hidden, cfg: LMConfig, *,
+             mesh=None, xent_chunks: int = 8):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict token t+2 from
+    [h_t ; emb(y_{t+1})] through one extra transformer block."""
+    b, s = token_ids.shape
+    cos, sin = L.rope_freqs(
+        cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
+        max(s, cfg.max_seq), cfg.rope_theta)
+    emb_next = L.embed(params["embed"], labels).astype(cfg.compute_dtype)
+    h = jnp.concatenate([final_hidden, emb_next], axis=-1)
+    h = L.linear(params["mtp"]["proj"], h)
+    h, _ = _layer_apply(params["mtp"]["block"], h, cfg, cfg.n_layers, cos,
+                        sin, mesh)
+    # target: one more shift (predict t+2); drop last position
+    mtp_labels = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+    hn = L.rmsnorm(params["mtp"]["norm"], h)
+    table = _unembed_table(params, cfg)
+    n_chunks = min(xent_chunks, s)
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+    total = jnp.zeros((), jnp.float32)
+    for c in range(n_chunks):
+        hc = hn[:, c * cs:(c + 1) * cs]
+        logits = jnp.einsum("bsd,vd->bsv", hc, table).astype(jnp.float32)
+        lab = mtp_labels[:, c * cs:(c + 1) * cs]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold_rows = jnp.take(table, lab, axis=0).astype(jnp.float32)
+        gold = jnp.einsum("bsd,bsd->bs", hc.astype(jnp.float32), gold_rows)
+        total = total + jnp.sum(lse - gold)
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# KV cache: prefill + decode
+# ---------------------------------------------------------------------------
+
+def lm_init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    caches = []
+    for i in range(cfg.n_layers):
+        if cfg.attn_kind == "mla":
+            caches.append({
+                "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            })
+        else:
+            caches.append({
+                "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+            })
+    return caches
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    return jax.eval_shape(lambda: lm_init_cache(cfg, batch, max_len, dtype))
+
+
+def _fill_cache_gqa(p, x, cos, sin, cache):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    k = L.apply_rope(k, cos, sin)
+    s = x.shape[1]
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, :s].set(k.astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[:, :s].set(v.astype(cache["v"].dtype))
+    return cache
+
+
+def _fill_cache_mla(p, x, cos, sin, cache):
+    kv_lora = p["wk_b"].shape[0]
+    kv = x @ p["wkv_a"]
+    c_kv = L.rmsnorm(p["kv_norm"], kv[..., :kv_lora])
+    k_rope = L.apply_rope(kv[..., kv_lora:][:, :, None, :], cos, sin)[:, :, 0]
+    s = x.shape[1]
+    cache = dict(cache)
+    cache["c_kv"] = cache["c_kv"].at[:, :s].set(c_kv.astype(cache["c_kv"].dtype))
+    cache["k_rope"] = cache["k_rope"].at[:, :s].set(
+        k_rope.astype(cache["k_rope"].dtype))
+    return cache
+
+
+def lm_prefill_scan(params, token_ids, cfg: LMConfig, *, mesh=None):
+    """Segment-scan prefill (layer_scan configs): the per-layer caches come
+    out as scan ys, stacked (L_seg, B, S, ...) per segment.
+
+    Returns (dense_caches list, segment_caches list of stacked trees,
+    exit_hidden list[(B, D)])."""
+    b, s = token_ids.shape
+    cos, sin = L.rope_freqs(
+        cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
+        max(s, cfg.max_seq), cfg.rope_theta)
+    x = L.embed(params["embed"], token_ids).astype(cfg.compute_dtype)
+    x = _residual_constraint(x, cfg, mesh)
+    dense_caches, exit_h = [], []
+
+    def layer_with_cache(p, h):
+        hn = L.rmsnorm(p["attn_norm"], h)
+        if cfg.attn_kind == "mla":
+            a = L.mla_apply(p["attn"], hn, cos, sin, causal=True,
+                            chunked=cfg.attn_chunked, q_chunk=cfg.q_chunk,
+                            kv_chunk=cfg.kv_chunk)
+            kv_lora = cfg.kv_lora_rank
+            kv = hn @ p["attn"]["wkv_a"]
+            c_kv = L.rmsnorm(p["attn"]["kv_norm"], kv[..., :kv_lora])
+            k_rope = L.apply_rope(kv[..., kv_lora:][:, :, None, :], cos,
+                                  sin)[:, :, 0]
+            cache = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            a = L.gqa_apply(p["attn"], hn, cos, sin, causal=True,
+                            chunked=cfg.attn_chunked, q_chunk=cfg.q_chunk,
+                            kv_chunk=cfg.kv_chunk)
+            k = L.apply_rope(jnp.einsum("bsd,dhk->bshk", hn,
+                                        p["attn"]["wk"]), cos, sin)
+            v = jnp.einsum("bsd,dhk->bshk", hn, p["attn"]["wv"])
+            cache = {"k": k, "v": v}
+        h = h + a
+        h = _residual_constraint(h, cfg, mesh)
+        h2 = L.rmsnorm(p["ffn_norm"], h)
+        if "moe" in p:
+            f, _ = moe_apply(p["moe"], h2, cfg.moe, mesh=mesh,
+                             dp_axes=_dp_axes(mesh),
+                             ep_mode=cfg.moe_ep_mode)
+        else:
+            f = L.swiglu(p["ffn"], h2)
+        h = _residual_constraint(h + f, cfg, mesh)
+        return h, cache
+
+    for i in range(cfg.n_dense_layers):
+        x, cache = layer_with_cache(params["layers"][i], x)
+        dense_caches.append(cache)
+        if i in cfg.exit_layers:
+            exit_h.append(x[:, -1])
+
+    seg_caches = []
+    segs = scan_segments(cfg)
+    for k, (a_, bnd) in enumerate(segs):
+        def body(h, lp):
+            h, cache = layer_with_cache(lp, h)
+            return h, cache
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, caches = lax.scan(body, x, params["segments"][k])
+        seg_caches.append(caches)
+        if (bnd - 1) in cfg.exit_layers:
+            exit_h.append(x[:, -1])
+    exit_h.append(x[:, -1])
+    return dense_caches, seg_caches, exit_h
+
+
+def lm_prefill(params, token_ids, cfg: LMConfig, cache, *, mesh=None):
+    """Process the prompt, filling the KV cache.  Returns
+    (new_cache, exit_hidden at the last position list[(B, D)])."""
+    b, s = token_ids.shape
+    cos, sin = L.rope_freqs(
+        cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
+        max(s, cfg.max_seq), cfg.rope_theta)
+    x = L.embed(params["embed"], token_ids).astype(cfg.compute_dtype)
+    x = _residual_constraint(x, cfg, mesh)
+    new_cache = []
+    exit_h = []
+    for i in range(cfg.n_layers):
+        p = params["layers"][i]
+        h = L.rmsnorm(p["attn_norm"], x)
+        if cfg.attn_kind == "mla":
+            a = L.mla_apply(p["attn"], h, cos, sin, causal=True,
+                            chunked=cfg.attn_chunked, q_chunk=cfg.q_chunk,
+                            kv_chunk=cfg.kv_chunk)
+            new_cache.append(_fill_cache_mla(p["attn"], h, cos, sin,
+                                             cache[i]))
+        else:
+            a = L.gqa_apply(p["attn"], h, cos, sin, causal=True,
+                            chunked=cfg.attn_chunked, q_chunk=cfg.q_chunk,
+                            kv_chunk=cfg.kv_chunk)
+            new_cache.append(_fill_cache_gqa(p["attn"], h, cos, sin,
+                                             cache[i]))
+        x = x + a
+        x = _residual_constraint(x, cfg, mesh)
+        h2 = L.rmsnorm(p["ffn_norm"], x)
+        if cfg.layer_is_moe(i):
+            f, _ = moe_apply(p["moe"], h2, cfg.moe, mesh=mesh,
+                             dp_axes=_dp_axes(mesh), ep_mode=cfg.moe_ep_mode,
+                           dispatch=cfg.moe_dispatch)
+        else:
+            f = L.swiglu(p["ffn"], h2)
+        x = x + f
+        x = _residual_constraint(x, cfg, mesh)
+        if i in cfg.exit_layers:
+            exit_h.append(x[:, -1])
+    exit_h.append(x[:, -1])
+    return new_cache, exit_h
+
+
+def lm_decode_step(params, token_ids, cache, cache_index, cfg: LMConfig, *,
+                   mesh=None):
+    """One decode step.  token_ids: (B, 1).  Returns
+    (exit_hidden list[(B, D)] — one per exit + final, new_cache).
+
+    This is the *masked-mode* step: all layers compute (worst-case
+    roofline); Alg. 1 gating is applied on the stacked exit logits by
+    ``repro.core.routing.select_exit``.
+    """
+    b = token_ids.shape[0]
+    max_len = (cache[0]["c_kv"].shape[1] if cfg.attn_kind == "mla"
+               else cache[0]["k"].shape[1])
+    cos, sin = L.rope_freqs(
+        cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
+        max_len, cfg.rope_theta)
+    x = L.embed(params["embed"], token_ids).astype(cfg.compute_dtype)
+    new_cache = []
+    exit_h = []
+    for i in range(cfg.n_layers):
+        p = params["layers"][i]
+        h = L.rmsnorm(p["attn_norm"], x)
+        if cfg.attn_kind == "mla":
+            a, c = L.mla_decode(p["attn"], h, cos, sin, cache[i], cache_index)
+        else:
+            a, c = L.gqa_decode(p["attn"], h, cos, sin, cache[i], cache_index)
+        new_cache.append(c)
+        x = x + a
+        h2 = L.rmsnorm(p["ffn_norm"], x)
+        if cfg.layer_is_moe(i):
+            f, _ = moe_apply(p["moe"], h2, cfg.moe, mesh=mesh,
+                             dp_axes=_dp_axes(mesh), ep_mode=cfg.moe_ep_mode,
+                           dispatch=cfg.moe_dispatch)
+        else:
+            f = L.swiglu(p["ffn"], h2)
+        x = x + f
+        if i in cfg.exit_layers:
+            exit_h.append(x[:, 0])
+    exit_h.append(x[:, 0])
+    return exit_h, new_cache
+
+
+def lm_kv_propagate(params, h_exit, cfg: LMConfig, cache, cache_index,
+                    from_layer: int):
+    """CALM-style state propagation: after a sample exits at ``from_layer``,
+    fill the deeper layers' KV caches from the (frozen) exit hidden state so
+    that future tokens can attend to this position.  Only the KV projections
+    run — this is the cheap path that makes true layer-skipping sound."""
+    max_len = (cache[0]["c_kv"].shape[1] if cfg.attn_kind == "mla"
+               else cache[0]["k"].shape[1])
+    cos, sin = L.rope_freqs(
+        cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
+        max_len, cfg.rope_theta)
+    positions = jnp.full((h_exit.shape[0], 1), cache_index, jnp.int32)
+    new_cache = list(cache)
+    x = h_exit[:, None, :]
+    for i in range(from_layer, cfg.n_layers):
+        p = params["layers"][i]
+        hn = L.rmsnorm(p["attn_norm"], x)
+        if cfg.attn_kind == "mla":
+            kv_lora = p["attn"]["wk_b"].shape[0]
+            kv = hn @ p["attn"]["wkv_a"]
+            c_kv = L.rmsnorm(p["attn"]["kv_norm"], kv[..., :kv_lora])
+            k_rope = L.apply_rope(kv[..., kv_lora:][:, :, None, :], cos, sin,
+                                  positions)[:, :, 0]
+            c = dict(cache[i])
+            c["c_kv"] = lax.dynamic_update_slice_in_dim(
+                c["c_kv"], c_kv.astype(c["c_kv"].dtype), cache_index, axis=1)
+            c["k_rope"] = lax.dynamic_update_slice_in_dim(
+                c["k_rope"], k_rope.astype(c["k_rope"].dtype), cache_index,
+                axis=1)
+        else:
+            k = jnp.einsum("bsd,dhk->bshk", hn, p["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", hn, p["attn"]["wv"])
+            k = L.apply_rope(k, cos, sin, positions)
+            c = dict(cache[i])
+            c["k"] = lax.dynamic_update_slice_in_dim(
+                c["k"], k.astype(c["k"].dtype), cache_index, axis=1)
+            c["v"] = lax.dynamic_update_slice_in_dim(
+                c["v"], v.astype(c["v"].dtype), cache_index, axis=1)
+        new_cache[i] = c
+    return new_cache
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs (for the roofline MODEL_FLOPS/HLO_FLOPS ratio)
+# ---------------------------------------------------------------------------
+
+def lm_param_count(cfg: LMConfig) -> int:
+    d, v = cfg.d_model, cfg.vocab
+    emb = v * d
+    if cfg.attn_kind == "mla":
+        attn = (d * cfg.q_lora_rank
+                + cfg.q_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+                + cfg.n_heads * cfg.v_head_dim * d)
+    else:
+        attn = d * cfg.hd * (cfg.n_heads + 2 * cfg.n_kv_heads) \
+            + cfg.n_heads * cfg.hd * d
+    dense_ffn = 3 * d * cfg.d_ff
+    total = emb if cfg.tie_embeddings else 2 * emb
+    for i in range(cfg.n_layers):
+        total += attn + 2 * d
+        if cfg.layer_is_moe(i):
+            m = cfg.moe
+            total += d * m.n_experts \
+                + m.n_experts * 3 * d * m.d_ff \
+                + m.n_shared * 3 * d * m.d_ff
+        else:
+            total += dense_ffn
+    return total
+
+
+def lm_active_param_count(cfg: LMConfig) -> int:
+    """Active params per token (MoE: only top-k + shared experts)."""
+    if cfg.moe is None:
+        return lm_param_count(cfg)
+    d = cfg.d_model
+    m = cfg.moe
+    full = lm_param_count(cfg)
+    n_moe = cfg.n_layers - cfg.n_dense_layers
+    inactive = n_moe * (m.n_experts - m.top_k) * 3 * d * m.d_ff
+    return full - inactive
+
+
+def lm_forward_flops(cfg: LMConfig, batch: int, seq: int,
+                     n_exits_computed: int | None = None,
+                     kv_len: int | None = None) -> int:
+    """Analytic forward FLOPs (2·MACs), attention quadratic term included.
+
+    ``kv_len`` set => decode step (seq tokens each attending kv_len)."""
+    d = cfg.d_model
+    t = batch * seq
+    fl = 0
+    fl += 0  # embedding lookup ~ free
+    for i in range(cfg.n_layers):
+        if cfg.attn_kind == "mla":
+            h, nope, rope, vh = (cfg.n_heads, cfg.qk_nope_dim,
+                                 cfg.qk_rope_dim, cfg.v_head_dim)
+            fl += 2 * t * d * cfg.q_lora_rank
+            fl += 2 * t * cfg.q_lora_rank * h * (nope + rope)
+            fl += 2 * t * d * (cfg.kv_lora_rank + rope)
+            fl += 2 * t * cfg.kv_lora_rank * h * (nope + vh)
+            fl += 2 * t * h * vh * d
+            attn_ctx = kv_len if kv_len is not None else seq / 2
+            fl += 2 * 2 * t * h * (nope + rope) * attn_ctx
+        else:
+            h, hd, kv = cfg.n_heads, cfg.hd, cfg.n_kv_heads
+            fl += 2 * t * d * hd * (h + 2 * kv) + 2 * t * h * hd * d
+            attn_ctx = kv_len if kv_len is not None else seq / 2
+            fl += 2 * 2 * t * h * hd * attn_ctx
+        if cfg.layer_is_moe(i):
+            fl += moe_flops(t, d, cfg.moe)
+        else:
+            fl += t * 3 * 2 * d * cfg.d_ff
+    n_heads_out = (n_exits_computed if n_exits_computed is not None
+                   else cfg.n_exits)
+    fl += n_heads_out * 2 * t * d * cfg.vocab
+    return int(fl)
+
+
+def lm_train_flops(cfg: LMConfig, batch: int, seq: int) -> int:
+    """fwd + bwd ≈ 3× forward (plus remat ≈ +1 forward when enabled)."""
+    f = lm_forward_flops(cfg, batch, seq)
+    return int(f * (4 if cfg.remat else 3))

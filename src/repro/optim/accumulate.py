@@ -1,0 +1,41 @@
+"""Gradient accumulation (microbatching) helper.
+
+Python-unrolled over microbatches so HLO cost analysis stays exact (a
+scan would undercount — DESIGN.md §4.2); the fori-loop variant is
+available for long accumulation horizons.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class GradAccumulator:
+    """accumulate(loss_fn, params, batches) -> (mean_loss, mean_grads)."""
+
+    def __init__(self, n_micro: int):
+        self.n_micro = n_micro
+
+    def split(self, batch):
+        """Split a global batch pytree into n_micro microbatches (axis 0)."""
+        def sp(x):
+            b = x.shape[0]
+            assert b % self.n_micro == 0, (b, self.n_micro)
+            return x.reshape(self.n_micro, b // self.n_micro, *x.shape[1:])
+        return jax.tree.map(sp, batch)
+
+    def accumulate(self, loss_fn, params, batch, *args):
+        micro = self.split(batch)
+        grads = None
+        total = jnp.zeros((), jnp.float32)
+        aux_last = None
+        for i in range(self.n_micro):
+            mb = jax.tree.map(lambda x: x[i], micro)
+            (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb, *args)
+            total = total + loss
+            aux_last = aux
+            grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
+        scale = 1.0 / self.n_micro
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        return total * scale, grads, aux_last

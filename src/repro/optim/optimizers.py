@@ -1,0 +1,145 @@
+"""Optimizers (no optax): SGD(+momentum), AdamW.
+
+Functional API:
+    opt = adamw(schedule, b1=0.9, ...)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+
+Optimizer state mirrors the parameter pytree, so any parameter sharding
+(including FSDP) applies verbatim to the moments — ZeRO-style sharded
+optimizer state falls out of the sharding rules for free.
+
+``trainable_mask`` filters non-trainable leaves (BatchNorm running stats,
+tagged with the "_stats" logical axis) — masked leaves get zero updates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.batchnorm import STATS_AXIS
+
+
+@dataclasses.dataclass
+class OptimizerState:
+    step: Any
+    inner: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def trainable_mask(axes_tree):
+    """True for trainable leaves; False for running-stats leaves."""
+    return jax.tree.map(
+        lambda axes: not (isinstance(axes, tuple) and STATS_AXIS in axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def apply_mask(updates, mask):
+    if mask is None:
+        return updates
+    return jax.tree.map(lambda u, m: u if m else jnp.zeros_like(u),
+                        updates, mask)
+
+
+def _to_lr(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.9, *, nesterov=False, weight_decay=0.0,
+        max_grad_norm: float | None = None, mask=None) -> Optimizer:
+    def init(params):
+        return OptimizerState(
+            step=jnp.zeros((), jnp.int32),
+            inner={"mom": jax.tree.map(jnp.zeros_like, params)})
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        lr_t = _to_lr(lr, state.step).astype(jnp.float32) \
+            if hasattr(_to_lr(lr, state.step), "astype") else _to_lr(lr, state.step)
+        mom = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                           state.inner["mom"], grads)
+        upd = jax.tree.map(lambda m, g: momentum * m + g if nesterov else m,
+                           mom, grads)
+        if weight_decay:
+            upd = jax.tree.map(lambda u, p: u + weight_decay * p, upd, params)
+        upd = apply_mask(upd, mask)
+        new = jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                         - lr_t * u.astype(jnp.float32)
+                                         ).astype(p.dtype), params, upd)
+        return new, OptimizerState(state.step + 1, {"mom": mom})
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          max_grad_norm: float | None = 1.0, mask=None,
+          moment_dtype=jnp.float32) -> Optimizer:
+    """AdamW with decoupled weight decay and optional bf16 moments
+    (`moment_dtype=jnp.bfloat16` — the DeepSeek-V3 memory trick; see
+    DESIGN.md §4.4)."""
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptimizerState(
+            step=jnp.zeros((), jnp.int32),
+            inner={"m": jax.tree.map(zeros, params),
+                   "v": jax.tree.map(zeros, params)})
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr_t = _to_lr(lr, step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: (b1 * m_.astype(jnp.float32)
+                                        + (1 - b1) * g.astype(jnp.float32)
+                                        ).astype(moment_dtype),
+                         state.inner["m"], grads)
+        v = jax.tree.map(lambda v_, g: (b2 * v_.astype(jnp.float32)
+                                        + (1 - b2) * jnp.square(
+                                            g.astype(jnp.float32))
+                                        ).astype(moment_dtype),
+                         state.inner["v"], grads)
+
+        def upd(m_, v_, p):
+            mh = m_.astype(jnp.float32) / bc1
+            vh = v_.astype(jnp.float32) / bc2
+            u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, m, v, params)
+        updates = apply_mask(updates, mask)
+        new = jax.tree.map(lambda p, u: (p.astype(jnp.float32) - lr_t * u
+                                         ).astype(p.dtype), params, updates)
+        return new, OptimizerState(step, {"m": m, "v": v})
+
+    return Optimizer(init, update)
+
+
+jax.tree_util.register_pytree_node(
+    OptimizerState,
+    lambda s: ((s.step, s.inner), None),
+    lambda _, c: OptimizerState(*c))

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (callables: step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_decay(peak, total_steps, end_frac=0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        frac = jnp.clip(s / max(total_steps, 1), 0.0, 1.0)
+        return peak * (1.0 - (1.0 - end_frac) * frac)
+    return f
+
+
+def warmup_cosine(peak, warmup_steps, total_steps, end_frac=0.0):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = end_frac * peak + (1 - end_frac) * peak \
+            * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return f

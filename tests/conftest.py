@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own flags in a
+# subprocess); never set xla_force_host_platform_device_count here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

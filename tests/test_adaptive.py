@@ -1,0 +1,126 @@
+"""Tests for adaptive coefficient management (paper §II.C, Eqs. 13–15)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adaptive as AD
+
+
+def cfg(**kw):
+    base = dict(n_exits=4, n_classes=10, window=128, update_every=16)
+    base.update(kw)
+    return AD.AdaptiveConfig(**base)
+
+
+def record_uniform(state, c, *, correct=1.0, n=32, cost=0.5, cls=None):
+    b = n
+    return AD.record_batch(
+        state, c,
+        jnp.arange(b) % c.n_exits,
+        jnp.full((b,), cls if cls is not None else 0, jnp.int32)
+        if cls is not None else jnp.arange(b) % c.n_classes,
+        jnp.full((b,), 0.8), jnp.full((b,), correct), jnp.full((b,), cost))
+
+
+def test_ring_buffer_wraps():
+    c = cfg(window=16)
+    st = AD.init_state(c)
+    for _ in range(3):
+        st = record_uniform(st, c, n=10)
+    assert int(st["seen"]) == 30
+    assert int(st["ptr"]) == 30 % 16
+    ws = AD.window_stats(st, c)
+    assert float(ws["n"]) == 16
+
+
+def test_temporal_update_direction():
+    """Eq. 13: low accuracy -> coefficients rise (conservative); high
+    accuracy -> they fall toward aggressive exits."""
+    c = cfg(a_target=0.85)
+    st_low = record_uniform(AD.init_state(c), c, correct=0.3)
+    st_low = AD.temporal_update(st_low, c)
+    assert float(st_low["coef_temporal"][0]) > 1.0
+
+    st_hi = record_uniform(AD.init_state(c), c, correct=1.0)
+    st_hi = AD.temporal_update(st_hi, c)
+    assert float(st_hi["coef_temporal"][0]) < 1.0
+
+
+def test_temporal_update_is_ema_with_decay():
+    c = cfg(alpha_decay=0.95)
+    st = record_uniform(AD.init_state(c), c, correct=0.0)
+    before = np.asarray(st["coef_temporal"])
+    st = AD.temporal_update(st, c)
+    after = np.asarray(st["coef_temporal"])
+    target = 1.0 + c.kappa * (c.a_target - 0.0)
+    np.testing.assert_allclose(after, 0.95 * before + 0.05 * target,
+                               rtol=1e-5)
+
+
+def test_coefficients_clamped():
+    c = cfg(coef_min=0.5, coef_max=1.5, kappa=100.0)
+    st = record_uniform(AD.init_state(c), c, correct=0.0)
+    for _ in range(50):
+        st = AD.temporal_update(st, c)
+    assert float(jnp.max(st["coef_temporal"])) <= 1.5 + 1e-6
+
+
+def test_class_aware_update_eq14():
+    """Eq. 14: underperforming class coefficient rises by η(A_t − A_c)."""
+    c = cfg(eta=0.1, a_target=0.85)
+    st = AD.init_state(c)
+    st = record_uniform(st, c, correct=0.0, cls=3)     # class 3 fails
+    st2 = AD.class_aware_update(st, c)
+    delta = np.asarray(st2["coef_class"] - st["coef_class"])
+    assert delta[3].mean() == pytest.approx(0.1 * 0.85, rel=1e-4)
+    # classes without data do not move
+    assert np.abs(delta[5]).max() < 1e-7
+
+
+def test_ucb_prefers_best_arm():
+    """Eq. 15 regret check: after warmup, the best-reward arm dominates."""
+    c = cfg(ucb_enabled=True)
+    st = AD.init_state(c)
+    rewards = {0: 0.9, 1: 0.2, 2: 0.4, 3: 0.1}
+    picks = []
+    for t in range(300):
+        arm = int(st["active_strategy"])
+        picks.append(arm)
+        st = AD.ucb_update(st, c, rewards[arm]
+                           + 0.05 * np.random.RandomState(t).randn())
+    late = picks[150:]
+    assert np.mean(np.asarray(late) == 0) > 0.6, np.bincount(late)
+
+
+def test_ucb_explores_all_arms_first():
+    c = cfg()
+    st = AD.init_state(c)
+    seen = set()
+    for _ in range(len(AD.STRATEGIES)):
+        seen.add(int(st["active_strategy"]))
+        st = AD.ucb_update(st, c, 0.5)
+    assert seen == set(range(len(AD.STRATEGIES)))
+
+
+def test_effective_coef_strategies():
+    c = cfg()
+    st = AD.init_state(c)
+    st["coef_temporal"] = jnp.full((3,), 1.2)
+    st["coef_class"] = jnp.full((10, 3), 0.8)
+    for arm, want in [(0, 1.2), (1, 0.8), (2, 1.0), (3, 1.0)]:
+        st["active_strategy"] = jnp.asarray(arm)
+        got = AD.effective_coef(st, c)
+        assert float(got[0]) == pytest.approx(want), arm
+    # per-class indexing
+    st["active_strategy"] = jnp.asarray(1)
+    got = AD.effective_coef(st, c, pseudo_class=jnp.asarray([2, 5]))
+    assert got.shape == (2, 3)
+
+
+def test_periodic_update_runs_jitted():
+    import jax
+    c = cfg()
+    st = record_uniform(AD.init_state(c), c)
+    f = jax.jit(lambda s: AD.periodic_update(s, c))
+    st2 = f(st)
+    assert int(st2["t"]) == int(st["t"]) + 1

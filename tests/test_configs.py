@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: every assigned arch's REDUCED config runs
+one forward / train step on CPU with finite outputs and correct shapes.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import get_family, family_of
+from repro.models.transformer_lm import lm_multi_exit_loss
+from repro.models.dit import diffusion_loss
+from repro.core import routing as R
+from repro.parallel.sharding import unzip, param_count
+
+KEY = jax.random.key(0)
+ARCHS = sorted(registry.ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = registry.get(arch)
+    spec = {
+        "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32,
+                               n_kv_heads=4, d_ff=5632, vocab=32000),
+        "internlm2-20b": dict(n_layers=48, d_model=6144, n_heads=48,
+                              n_kv_heads=8, d_ff=16384, vocab=92544),
+        "granite-moe-3b-a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                     n_kv_heads=8, vocab=49155),
+        "deepseek-v3-671b": dict(n_layers=61, d_model=7168, n_heads=128,
+                                 vocab=129280),
+        "dit-s2": dict(n_layers=12, d_model=384, n_heads=6, patch=2,
+                       img_res=256),
+        "dit-xl2": dict(n_layers=28, d_model=1152, n_heads=16, patch=2),
+        "vit-h14": dict(n_layers=32, d_model=1280, n_heads=16, d_ff=5120,
+                        patch=14),
+        "vit-s16": dict(n_layers=12, d_model=384, n_heads=6, d_ff=1536,
+                        patch=16),
+        "convnext-b": dict(depths=(3, 3, 27, 3), dims=(128, 256, 512, 1024)),
+        "resnet-152": dict(depths=(3, 8, 36, 3), width=64),
+    }[arch]
+    for k, v in spec.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    if arch == "granite-moe-3b-a800m":
+        assert cfg.moe.n_experts == 40 and cfg.moe.top_k == 8
+    if arch == "deepseek-v3-671b":
+        assert cfg.moe.n_experts == 256 and cfg.moe.top_k == 8
+        assert cfg.attn_kind == "mla" and cfg.moe.n_shared == 1 and cfg.mtp
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_smoke_forward_and_train_step(arch):
+    cfg = registry.get_reduced(arch)
+    fam_name = family_of(cfg)
+    fam = get_family(cfg)
+    p, _ = unzip(fam.init(KEY, cfg))
+    assert param_count(p) > 0
+
+    if fam_name == "lm":
+        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+        out = fam.forward(p, toks, cfg)
+        assert len(out["exit_hidden"]) == cfg.n_exits
+        for h in out["exit_hidden"]:
+            assert h.shape == (2, 16, cfg.d_model)
+            assert bool(jnp.all(jnp.isfinite(h)))
+        loss, _ = lm_multi_exit_loss(p, toks, toks, cfg, xent_chunks=2)
+        g = jax.grad(lambda p: lm_multi_exit_loss(
+            p, toks, toks, cfg, xent_chunks=2)[0])(p)
+        assert bool(jnp.isfinite(loss))
+        gn = sum(float(jnp.sum(jnp.square(x))) for x in jax.tree.leaves(g))
+        assert np.isfinite(gn) and gn > 0
+    elif fam_name == "dit":
+        lat = jax.random.normal(KEY, (2, cfg.latent_res, cfg.latent_res,
+                                      cfg.in_channels))
+        t = jnp.array([5, 200])
+        y = jnp.array([0, 3])
+        out = fam.forward(p, lat, t, y, cfg)
+        assert len(out["exit_eps"]) == cfg.n_exits
+        for e in out["exit_eps"]:
+            assert e.shape == (2, cfg.latent_res, cfg.latent_res,
+                               cfg.out_channels)
+            assert bool(jnp.all(jnp.isfinite(e)))
+        loss, _ = diffusion_loss(p, cfg, lat, y, KEY)
+        assert bool(jnp.isfinite(loss))
+    else:
+        imgs = jax.random.uniform(KEY, (2, cfg.img_res, cfg.img_res, 3))
+        out = fam.forward(p, imgs, cfg, train=True)
+        el = out["exit_logits"]
+        assert el.shape == (cfg.n_exits, 2, cfg.n_classes)
+        assert bool(jnp.all(jnp.isfinite(el)))
+        loss, _ = R.multi_exit_xent(el, jnp.array([0, 1]))
+        assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shapes_assigned(arch):
+    shapes = registry.shapes(arch)
+    names = {s.name for s in shapes}
+    fam = family_of(registry.get(arch))
+    if fam == "lm":
+        assert names == {"train_4k", "prefill_32k", "decode_32k",
+                         "long_500k"}
+    elif fam == "dit":
+        assert names == {"train_256", "gen_1024", "gen_fast", "train_1024"}
+    else:
+        assert names == {"cls_224", "cls_384", "serve_b1", "serve_b128"}
+
+
+def test_cells_count_is_40():
+    assert len(registry.cells()) == 40
+
+
+def test_paper_testbeds_instantiate():
+    tb = registry.paper_testbeds()
+    assert set(tb) >= {"alexnet", "resnet-18", "vgg16", "levit-128s"}

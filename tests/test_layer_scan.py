@@ -1,0 +1,74 @@
+"""Segment-scan path (deepseek-size compile control) == unrolled path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models.transformer_lm import (lm_init, lm_forward,
+                                         lm_multi_exit_loss,
+                                         lm_prefill_scan, scan_segments)
+from repro.parallel.sharding import unzip
+
+KEY = jax.random.key(0)
+
+
+def cfgs():
+    cfg_u = registry.get_reduced("deepseek-v3-671b")
+    return cfg_u, dataclasses.replace(cfg_u, layer_scan=True)
+
+
+def test_segments_cover_all_layers():
+    _, cfg_s = cfgs()
+    segs = scan_segments(cfg_s)
+    covered = []
+    for a, b in segs:
+        covered.extend(range(a, b))
+    assert covered == list(range(cfg_s.n_dense_layers, cfg_s.n_layers))
+    # exits land exactly at segment ends
+    ends = {b - 1 for _, b in segs[:-1]}
+    assert ends <= set(cfg_s.exit_layers)
+
+
+def test_scan_forward_matches_unrolled():
+    cfg_u, cfg_s = cfgs()
+    pu, _ = unzip(lm_init(KEY, cfg_u))
+    ps, _ = unzip(lm_init(KEY, cfg_s))
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg_u.vocab)
+    fu = lm_forward(pu, toks, cfg_u)
+    fs = lm_forward(ps, toks, cfg_s)
+    np.testing.assert_allclose(fu["final_hidden"], fs["final_hidden"],
+                               atol=1e-5)
+    assert len(fs["exit_hidden"]) == cfg_s.n_exits
+    for a, b in zip(fu["exit_hidden"], fs["exit_hidden"]):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_scan_loss_and_grad_match():
+    cfg_u, cfg_s = cfgs()
+    pu, _ = unzip(lm_init(KEY, cfg_u))
+    ps, _ = unzip(lm_init(KEY, cfg_s))
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg_u.vocab)
+    lu, _ = lm_multi_exit_loss(pu, toks, toks, cfg_u, xent_chunks=2)
+    ls, _ = lm_multi_exit_loss(ps, toks, toks, cfg_s, xent_chunks=2)
+    assert abs(float(lu) - float(ls)) < 1e-4
+    g = jax.grad(lambda p: lm_multi_exit_loss(p, toks, toks, cfg_s,
+                                              xent_chunks=2)[0])(ps)
+    gn = sum(float(jnp.sum(jnp.square(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_scan_prefill_matches_forward():
+    _, cfg_s = cfgs()
+    ps, _ = unzip(lm_init(KEY, cfg_s))
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg_s.vocab)
+    dense_c, seg_c, exit_h = lm_prefill_scan(ps, toks, cfg_s)
+    full = lm_forward(ps, toks, cfg_s)
+    np.testing.assert_allclose(exit_h[-1], full["final_hidden"][:, -1],
+                               atol=3e-5)
+    assert len(dense_c) == cfg_s.n_dense_layers
+    segs = scan_segments(cfg_s)
+    assert len(seg_c) == len(segs)
+    for (a, b), c in zip(segs, seg_c):
+        assert c["c_kv"].shape[0] == b - a

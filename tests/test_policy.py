@@ -1,0 +1,95 @@
+"""Tests for the joint DP exit-policy optimizer (paper §II.B)."""
+import numpy as np
+import pytest
+
+from repro.core import policy as POL
+from repro.core import thresholds as TH
+
+
+def make_calibration(seed=0, n=2500, e=4, difficulty_hurts=True):
+    """Synthetic calibration set with confidence correlated to correctness
+    and difficulty degrading early exits (the regime DART targets)."""
+    rs = np.random.RandomState(seed)
+    skill = np.linspace(0.55, 0.93, e)
+    alpha = rs.rand(n)
+    degrade = 0.35 * alpha[:, None] * (1 - skill[None]) * 2 \
+        if difficulty_hurts else 0.0
+    p_correct = np.clip(skill[None] - degrade, 0.05, 0.99)
+    correct = (rs.rand(n, e) < p_correct).astype(float)
+    conf = np.clip(0.55 * correct + 0.25 * rs.rand(n, e)
+                   + 0.2 * skill[None], 0, 1)
+    cum = np.linspace(1.0 / e, 1.0, e)
+    return POL.CalibrationData(conf, correct, alpha, cum,
+                               labels=rs.randint(0, 10, n))
+
+
+def test_dp_beats_independent():
+    data = make_calibration()
+    dp = POL.optimize_joint_dp(data, beta_opt=0.5)
+    ind = POL.optimize_independent(data, beta_opt=0.5)
+    assert dp.objective >= ind.objective - 1e-9
+
+
+def test_bruteforce_is_upper_bound():
+    data = make_calibration(n=1200, e=3)
+    dp = POL.optimize_joint_dp(data, beta_opt=0.5)
+    bf = POL.optimize_brute_force(data, beta_opt=0.5)
+    assert bf.objective >= dp.objective - 1e-9
+    # and DP should land close to the oracle (within 5% of J range)
+    ind = POL.optimize_independent(data, beta_opt=0.5)
+    rng_ = max(bf.objective - ind.objective, 1e-6)
+    assert (bf.objective - dp.objective) <= 0.6 * rng_ + 1e-9
+
+
+def test_dp_generalizes_to_holdout():
+    data = make_calibration(n=4000)
+    train, val = data.split(0.7)
+    dp = POL.optimize_joint_dp(train, beta_opt=0.5)
+    j_val = float(TH.objective(val.conf, val.alpha, val.correct,
+                               val.cum_costs, dp.tau, dp.coef,
+                               dp.beta_diff, 0.5))
+    ind = POL.optimize_independent(train, beta_opt=0.5)
+    j_val_ind = float(TH.objective(val.conf, val.alpha, val.correct,
+                                   val.cum_costs, ind.tau, ind.coef,
+                                   ind.beta_diff, 0.5))
+    assert j_val >= j_val_ind - 0.02
+
+
+@pytest.mark.parametrize("beta_opt", [0.0, 0.3, 1.0])
+def test_higher_cost_pressure_exits_earlier(beta_opt):
+    data = make_calibration()
+    res = POL.optimize_joint_dp(data, beta_opt=beta_opt)
+    idx = TH.simulate_routing(data.conf, data.alpha, res.tau, res.coef,
+                              res.beta_diff)
+    mean_exit = float(np.mean(np.asarray(idx)))
+    if not hasattr(test_higher_cost_pressure_exits_earlier, "_prev"):
+        test_higher_cost_pressure_exits_earlier._prev = []
+    test_higher_cost_pressure_exits_earlier._prev.append(
+        (beta_opt, mean_exit))
+    prev = test_higher_cost_pressure_exits_earlier._prev
+    if len(prev) == 3:
+        assert prev[0][1] >= prev[-1][1] - 0.25, prev
+
+
+def test_dp_thresholds_rise_with_alpha_bin():
+    """The DP solution should be (weakly) more conservative for harder
+    α bins when difficulty hurts early-exit accuracy."""
+    data = make_calibration(n=6000)
+    res = POL.optimize_joint_dp(data, beta_opt=0.5, n_alpha_bins=3)
+    thr = res.dp_thresholds          # (E-1, A)
+    rising = (thr[:, -1] >= thr[:, 0] - 0.15).mean()
+    assert rising >= 0.5, thr
+
+
+def test_fit_beta_diff_grid():
+    data = make_calibration()
+    res = POL.optimize_joint_dp(data, beta_opt=0.5, fit_beta_diff=True)
+    assert 0.0 <= res.beta_diff <= 0.5
+
+
+def test_empirical_tables_are_distributions():
+    data = make_calibration(n=800)
+    acc, trans = POL._empirical_tables(data, 4, 8)
+    assert acc.shape == (4, 4, 8)
+    assert np.all(acc >= 0) and np.all(acc <= 1)
+    np.testing.assert_allclose(trans.sum(-1), 1.0, atol=1e-6)

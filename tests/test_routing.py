@@ -1,0 +1,101 @@
+"""Routing / baselines / DAES tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import routing as R
+from repro.core import baselines as BL
+from repro.core import daes
+from repro.core.policy import CalibrationData
+from repro.core.routing import DartParams
+
+
+def test_confidence_matches_softmax_max():
+    lg = jax.random.normal(jax.random.key(0), (3, 5, 11))
+    c = R.confidence_from_logits(lg)
+    want = jnp.max(jax.nn.softmax(lg, axis=-1), axis=-1)
+    np.testing.assert_allclose(c, want, rtol=1e-6)
+
+
+def test_entropy_uniform_is_log_v():
+    lg = jnp.zeros((2, 16))
+    e = R.entropy_from_logits(lg)
+    np.testing.assert_allclose(e, np.log(16), rtol=1e-6)
+
+
+def test_diffusion_confidence_converged_exits():
+    """Identical consecutive predictions => confidence 1; first exit 0."""
+    eps = jnp.ones((3, 2, 4, 4, 1))
+    conf = R.diffusion_confidence(eps)
+    assert conf.shape == (3, 2)
+    np.testing.assert_allclose(conf[0], 0.0)
+    np.testing.assert_allclose(conf[1:], 1.0, atol=1e-6)
+    # diverging predictions => low confidence
+    eps2 = jnp.stack([jnp.zeros((2, 4, 4, 1)), jnp.ones((2, 4, 4, 1)),
+                      -jnp.ones((2, 4, 4, 1))])
+    conf2 = R.diffusion_confidence(eps2)
+    assert float(conf2[2].mean()) < 0.2
+
+
+def test_classify_routed_selects_first_confident():
+    logits = jnp.full((3, 2, 4), -5.0)
+    # sample 0: exit 0 confident; sample 1: nothing confident -> final
+    logits = logits.at[0, 0, 1].set(10.0)
+    imgs = jnp.full((2, 16, 16, 3), 0.5)          # alpha ~ 0
+    dart = DartParams(tau=jnp.full((2,), 0.9), coef=jnp.ones(2),
+                      beta_diff=0.0)
+    out = R.classify_routed(logits, imgs, dart)
+    assert int(out["exit_idx"][0]) == 0
+    assert int(out["exit_idx"][1]) == 2
+    assert int(out["pred"][0]) == 1
+
+
+def test_multi_exit_xent_weighting():
+    e, b, c = 3, 8, 5
+    logits = jax.random.normal(jax.random.key(1), (e, b, c))
+    y = jax.random.randint(jax.random.key(2), (b,), 0, c)
+    loss, aux = R.multi_exit_xent(logits, y, policy_weight=0.0)
+    ces = aux["ce_per_exit"]
+    want = sum((i + 1) / e * ces[i] for i in range(e))
+    np.testing.assert_allclose(loss, want, rtol=1e-6)
+
+
+def test_branchynet_entropy_routing():
+    ent = np.array([[0.1, 0.5, 0.2], [2.0, 0.1, 0.3], [2.0, 2.0, 2.0]])
+    pol = BL.BranchyNetPolicy(np.array([0.5, 0.4]))
+    idx = pol.route(ent)
+    np.testing.assert_array_equal(idx, [0, 1, 2])
+
+
+def test_rl_agent_learns_to_exit_when_early_is_good():
+    rs = np.random.RandomState(0)
+    n, e = 800, 3
+    conf = rs.rand(n, e)
+    correct = np.ones((n, e))                  # every exit always right
+    data = CalibrationData(conf, correct, rs.rand(n),
+                           np.array([0.2, 0.6, 1.0]))
+    pol = BL.fit_rl_agent(data, beta_opt=1.0, epochs=8)
+    idx = pol.route(conf)
+    assert idx.mean() < 0.5                    # exits early to save cost
+
+
+def test_static_route():
+    idx = BL.static_route(np.zeros((5, 4)))
+    assert np.all(idx == 3)
+
+
+def test_daes_formula():
+    st = daes.MethodMeasurement("static", accuracy=0.9, time_s=1.0,
+                                macs=100.0)
+    m = daes.MethodMeasurement("dart", accuracy=0.8, time_s=0.25, macs=25.0)
+    # speedup 4, power_eff 4 => DAES = 0.8*4*4 / (1+0.5)
+    assert daes.daes(st, m, 0.5) == pytest.approx(0.8 * 4 * 4 / 1.5)
+    assert daes.daes(st, st, 0.5) == pytest.approx(0.9 / 1.5)
+    row = daes.summary_row(st, m, 0.5)
+    assert row["speedup"] == pytest.approx(4.0)
+
+
+def test_routed_macs():
+    macs = R.routed_macs(jnp.asarray([0, 2, 1]), [10.0, 20.0, 30.0])
+    np.testing.assert_allclose(macs, [10.0, 30.0, 20.0])

@@ -1,0 +1,113 @@
+"""Serving engine: compacted execution == masked Alg. 1 reference,
+adaptive updates, cost accounting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.routing import DartParams
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.models.cnn_zoo import AlexNetConfig
+from repro.models.vit import ViTConfig, vit_init
+from repro.parallel.sharding import unzip
+from repro.runtime.server import DartServer, _next_bucket
+from repro.runtime.trainer import Trainer, TrainConfig
+
+import jax
+
+DATA = DatasetConfig(name="synth-cifar", n_train=256, n_eval=128)
+
+
+@pytest.fixture(scope="module")
+def trained_cnn():
+    mc = AlexNetConfig(img_res=32, n_classes=10,
+                       channels=(16, 24, 32, 24, 24), fc_dims=(96, 48))
+    tr = Trainer(mc, TrainConfig(batch_size=32, steps=15, lr=3e-3), DATA)
+    tr.run()
+    return mc, tr.params
+
+
+def test_bucket_rounding():
+    assert _next_bucket(1, (1, 2, 4, 8)) == 1
+    assert _next_bucket(3, (1, 2, 4, 8)) == 4
+    assert _next_bucket(9, (1, 2, 4, 8)) == 8   # clamps at max
+
+
+@pytest.mark.parametrize("tau", [0.0, 0.35, 0.9])
+def test_compacted_equals_masked(trained_cnn, tau):
+    """The engine's stage-compacted decisions must be bit-identical to the
+    masked-mode Algorithm 1 reference at any threshold."""
+    mc, params = trained_cnn
+    dart = DartParams(tau=jnp.full((2,), tau), coef=jnp.ones(2),
+                      beta_diff=0.3)
+    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
+                     adapt=False)
+    x, y = make_batch(DATA, range(48), split="eval")
+    out = srv.infer_batch(x)
+    ref = srv.masked_reference(x)
+    np.testing.assert_array_equal(out["exit_idx"], np.asarray(ref["exit_idx"]))
+    np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+    np.testing.assert_allclose(out["conf"], np.asarray(ref["conf"]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_zero_threshold_exits_everything_early(trained_cnn):
+    mc, params = trained_cnn
+    dart = DartParams(tau=jnp.zeros(2), coef=jnp.zeros(2), beta_diff=0.0)
+    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
+                     adapt=False)
+    x, _ = make_batch(DATA, range(16), split="eval")
+    out = srv.infer_batch(x)
+    assert np.all(out["exit_idx"] == 0)
+    assert out["macs"].mean() == pytest.approx(0.3)
+
+
+def test_infinite_threshold_never_exits_early(trained_cnn):
+    mc, params = trained_cnn
+    dart = DartParams(tau=jnp.ones(2), coef=jnp.full((2,), 10.0),
+                      beta_diff=1.0)
+    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
+                     adapt=False)
+    x, _ = make_batch(DATA, range(16), split="eval")
+    out = srv.infer_batch(x)
+    assert np.all(out["exit_idx"] == 2)
+
+
+def test_adaptive_state_progresses(trained_cnn):
+    mc, params = trained_cnn
+    dart = DartParams(tau=jnp.full((2,), 0.4), coef=jnp.ones(2))
+    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
+                     adapt=True, update_every=16)
+    x, _ = make_batch(DATA, range(64), split="eval")
+    for i in range(0, 64, 16):
+        srv.infer_batch(x[i:i + 16])
+    assert int(srv.astate["seen"]) == 64
+    assert int(srv.astate["t"]) >= 3          # UCB updates happened
+    assert srv.stats.served == 64
+
+
+def test_exit_stats_accounting(trained_cnn):
+    mc, params = trained_cnn
+    dart = DartParams(tau=jnp.full((2,), 0.2), coef=jnp.ones(2),
+                      beta_diff=0.1)
+    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
+                     adapt=False)
+    x, _ = make_batch(DATA, range(32), split="eval")
+    out = srv.infer_batch(x)
+    assert srv.stats.exit_counts.sum() == 32
+    want = np.array([0.3, 0.7, 1.0])[out["exit_idx"]]
+    np.testing.assert_allclose(out["macs"], want)
+
+
+def test_server_works_for_vit():
+    vc = ViTConfig(name="vt", img_res=32, patch=8, n_layers=3, d_model=32,
+                   n_heads=2, d_ff=64, n_classes=10, exit_layers=(0, 1))
+    params, _ = unzip(vit_init(jax.random.key(0), vc))
+    dart = DartParams(tau=jnp.full((2,), 0.2), coef=jnp.ones(2))
+    srv = DartServer(vc, params, dart, cum_costs=[0.4, 0.7, 1.0],
+                     adapt=False)
+    x, _ = make_batch(DATA, range(8), split="eval")
+    out = srv.infer_batch(x)
+    ref = srv.masked_reference(x)
+    np.testing.assert_array_equal(out["exit_idx"],
+                                  np.asarray(ref["exit_idx"]))
+    np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))

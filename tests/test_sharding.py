@@ -1,0 +1,117 @@
+"""Sharding rules: logical-axis resolution, divisibility downgrades, and a
+multi-device (8 fake CPU devices) end-to-end train-step in a subprocess."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as SH
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_resolve_basic():
+    mesh = FakeMesh({"data": 4, "model": 2})
+    spec = SH.resolve_spec((8, 16), ("batch", "mlp"), SH.LM_RULES, mesh)
+    assert spec == P("data", "model")
+
+
+def test_resolve_downgrades_nondivisible():
+    mesh = FakeMesh({"data": 4, "model": 16})
+    dg = []
+    spec = SH.resolve_spec((6, 40), ("batch", "experts"), SH.LM_RULES, mesh,
+                           "x", dg)
+    assert spec == P()          # 6 % 4 != 0, 40 % 16 != 0 -> replicate
+    assert len(dg) == 2
+
+
+def test_resolve_tuple_prefix():
+    """batch=4 on (pod=2, data=16) resolves to the divisible prefix (pod,)."""
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = SH.resolve_spec((4, 8), ("batch", None), SH.LM_RULES, mesh)
+    assert spec == P("pod")
+
+
+def test_resolve_no_axis_reuse():
+    """Two dims must never claim the same mesh axis."""
+    mesh = FakeMesh({"data": 2, "model": 2})
+    spec = SH.resolve_spec((4, 4), ("mlp", "vocab"), SH.LM_RULES, mesh)
+    entries = [e for e in spec if e is not None]
+    assert len(entries) == len(set(entries)) <= 1
+
+
+def test_param_tagging_through_unzip():
+    from repro.models.layers import linear_init
+    tree = linear_init(jax.random.key(0), 8, 16, jnp.float32)
+    values, axes = SH.unzip(tree)
+    assert axes["w"] == ("embed", "mlp")
+    assert values["w"].shape == (8, 16)
+
+
+def test_abstract_init_no_allocation():
+    from repro.models.vit import ViTConfig, vit_init
+    cfg = ViTConfig(name="t", img_res=224, patch=14, n_layers=32,
+                    d_model=1280, n_heads=16, d_ff=5120,
+                    param_dtype=jnp.bfloat16)  # ViT-H: 632M params
+    tree = SH.abstract_init(vit_init, jax.random.key(0), cfg)
+    values, _ = SH.unzip(tree)
+    n = SH.param_count(values)
+    assert 6.0e8 < n < 7.5e8
+    assert all(isinstance(v, jax.ShapeDtypeStruct)
+               for v in jax.tree.leaves(values))
+
+
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "%s")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import registry
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(4, 2)
+    arch = sys.argv[1]
+    shape_name = sys.argv[2]
+    sp0 = next(s for s in registry.shapes(arch) if s.name == shape_name)
+    import dataclasses
+    sp = dataclasses.replace(sp0, batch=8,
+                             seq_len=32 if sp0.seq_len else None,
+                             img_res=32 if sp0.img_res else None)
+    b = S.build(arch, sp, mesh, reduced=True)
+    # CONCRETE execution on 8 fake devices: materialize zeros and run.
+    def zeros_like_sds(x, s):
+        return jax.device_put(jnp.zeros(x.shape, x.dtype), s)
+    args = jax.tree.map(zeros_like_sds, b.inputs, b.in_shardings,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    out = jax.jit(b.step, in_shardings=b.in_shardings)(*args)
+    leaves = [np.asarray(x) for x in jax.tree.leaves(out)]
+    assert all(np.all(np.isfinite(l)) for l in leaves if l.dtype.kind == "f")
+    print("MULTIDEV_OK", arch, shape_name)
+""" % os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("tinyllama-1.1b", "train_4k"),
+    ("granite-moe-3b-a800m", "train_4k"),
+    ("deepseek-v3-671b", "decode_32k"),
+    ("vit-s16", "serve_b128"),
+    ("dit-s2", "gen_fast"),
+])
+def test_multidevice_step_executes(arch, shape):
+    """Reduced configs run CONCRETELY under a 4x2 fake-device mesh — proves
+    the sharded step functions are not just compilable but executable."""
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT, arch, shape],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MULTIDEV_OK" in r.stdout

@@ -1,0 +1,97 @@
+"""Property tests for Eq. 12 / Eq. 19 / Algorithm 1."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import thresholds as TH
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), e=st.integers(2, 6),
+       b=st.integers(1, 16), beta=st.floats(0.0, 1.0))
+def test_select_exit_matches_sequential_alg1(seed, e, b, beta):
+    """Vectorized routing == per-sample Algorithm 1 loop."""
+    rs = np.random.RandomState(seed)
+    conf = rs.rand(e, b).astype(np.float32)
+    tau = rs.rand(e - 1).astype(np.float32)
+    coef = 0.5 + rs.rand(e - 1).astype(np.float32)
+    alpha = rs.rand(b).astype(np.float32)
+
+    eff = TH.adapt_thresholds(jnp.asarray(tau), jnp.asarray(coef),
+                              jnp.asarray(alpha), beta)
+    idx, c = TH.select_exit(jnp.asarray(conf), eff)
+
+    for s in range(b):
+        expected = e - 1
+        for i in range(e - 1):
+            t = np.clip(coef[i] * tau[i] + beta * alpha[s], 0.0, 1.0)
+            if conf[i, s] > t:
+                expected = i
+                break
+        assert int(idx[s]) == expected, (s, int(idx[s]), expected)
+        assert float(c[s]) == pytest.approx(conf[expected, s])
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), beta=st.floats(0.0, 1.0))
+def test_adapted_thresholds_clamped_and_monotone_in_alpha(seed, beta):
+    rs = np.random.RandomState(seed)
+    tau = rs.rand(3)
+    coef = rs.rand(3) * 2
+    a1, a2 = sorted(rs.rand(2))
+    e1 = TH.adapt_thresholds(jnp.asarray(tau), jnp.asarray(coef),
+                             jnp.asarray([a1]), beta)
+    e2 = TH.adapt_thresholds(jnp.asarray(tau), jnp.asarray(coef),
+                             jnp.asarray([a2]), beta)
+    assert bool(jnp.all(e1 >= 0)) and bool(jnp.all(e1 <= 1))
+    # harder inputs never get LOWER thresholds (Eq. 19, β ≥ 0)
+    assert bool(jnp.all(e2 >= e1))
+
+
+def test_harder_inputs_exit_later_on_average():
+    """The paper's central behavioural claim."""
+    rs = np.random.RandomState(0)
+    n, e = 2000, 4
+    conf = rs.rand(n, e).astype(np.float32)
+    tau = np.full(e - 1, 0.5, np.float32)
+    easy = TH.simulate_routing(conf, np.zeros(n), tau, np.ones(e - 1), 0.4)
+    hard = TH.simulate_routing(conf, np.ones(n), tau, np.ones(e - 1), 0.4)
+    assert float(jnp.mean(hard)) > float(jnp.mean(easy))
+
+
+def test_candidate_thresholds_are_quantiles():
+    conf = np.linspace(0, 1, 101)
+    cand = TH.candidate_thresholds(conf)
+    np.testing.assert_allclose(cand, np.arange(0.1, 0.91, 0.1), atol=1e-9)
+    assert np.all(np.diff(cand) >= 0)
+
+
+def test_exit_distribution_and_expected_cost():
+    idx = jnp.asarray([0, 0, 1, 3])
+    pi = TH.exit_distribution(idx, 4)
+    np.testing.assert_allclose(pi, [0.5, 0.25, 0.0, 0.25])
+    c = TH.expected_cost(idx, [0.1, 0.4, 0.7, 1.0])
+    assert float(c) == pytest.approx((0.1 + 0.1 + 0.4 + 1.0) / 4)
+
+
+def test_objective_accuracy_cost_tradeoff():
+    """β_opt = 0 maximizes accuracy; large β_opt prefers cheap exits."""
+    rs = np.random.RandomState(1)
+    n, e = 1000, 3
+    conf = rs.rand(n, e)
+    correct = np.tile([0.0, 0.0, 1.0], (n, 1))     # only final is right
+    alpha = rs.rand(n)
+    cum = np.array([0.2, 0.6, 1.0])
+    tau_never = np.array([1.0, 1.0])               # never exit early
+    tau_always = np.array([0.0, 0.0])
+    j_acc = TH.objective(conf, alpha, correct, cum, tau_never,
+                         np.ones(2), 0.0, beta_opt=0.0)
+    j_acc2 = TH.objective(conf, alpha, correct, cum, tau_always,
+                          np.ones(2), 0.0, beta_opt=0.0)
+    assert float(j_acc) > float(j_acc2)
+    j_cost = TH.objective(conf, alpha, correct, cum, tau_always,
+                          np.ones(2), 0.0, beta_opt=10.0)
+    j_cost2 = TH.objective(conf, alpha, correct, cum, tau_never,
+                           np.ones(2), 0.0, beta_opt=10.0)
+    assert float(j_cost) > float(j_cost2)
