@@ -1,0 +1,23 @@
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test smoke engine-test bench deps
+
+# Tier-1 verify (ROADMAP): the full test suite, fail-fast.
+test:
+	$(PY) -m pytest -x -q
+
+# Engine-focused subset (fast iteration on the serving path).
+engine-test:
+	$(PY) -m pytest -q tests/test_engine.py tests/test_server.py
+
+# End-to-end smoke: quickstart with tiny settings (~1 min on CPU).
+smoke:
+	QUICKSTART_STEPS=30 QUICKSTART_EVAL=128 $(PY) examples/quickstart.py
+
+# Paper-protocol benchmarks (quick budget).
+bench:
+	$(PY) -m benchmarks.run
+
+deps:
+	pip install -r requirements-test.txt

@@ -1,18 +1,23 @@
-"""Shared benchmark machinery: train → calibrate → fit policies → evaluate
-all four methods (Static / BranchyNet / RL-Agent / DART) exactly as in the
-paper's Table I protocol.
+"""Shared benchmark machinery on top of the ``repro.engine`` API:
+train → calibrate → fit policies → evaluate all four methods
+(Static / BranchyNet / RL-Agent / DART) exactly as in the paper's
+Table I protocol.
 
-Timing model: per-stage wall times are measured once on the staged model;
-a method's per-inference time is the cumulative stage time at its exit
-(+ the difficulty-estimator overhead for DART).  DART's wall time is also
-cross-checked against the real compacted serving engine.  Energy uses the
+Every method is a registered ``PolicyOptimizer`` (``repro.engine.
+registry``): it receives the same calibration measurements and returns a
+``PolicyResult``; holdout routing goes through ``route_policy`` so
+entropy-criterion and Q-table baselines evaluate under their native
+routers while DART routes through the Eq. 19 runtime form.
+
+Timing model: per-stage wall times are measured once on the staged
+model; a method's per-inference time is the cumulative stage time at its
+exit (+ the difficulty-estimator overhead for DART).  Energy uses the
 MACs proxy (paper §III: "architecture-agnostic metrics"); per-stage MACs
-come from XLA cost analysis of each stage function (exact, not hand
-counted).
+come from XLA cost analysis via ``DartEngine.measure_costs`` (exact, not
+hand counted).
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
 
@@ -20,20 +25,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as BL
 from repro.core import daes as DAES
 from repro.core import difficulty as DIFF
-from repro.core import policy as POL
-from repro.core import routing as R
-from repro.core import thresholds as TH
-from repro.core.routing import DartParams
-from repro.data.datasets import DatasetConfig, make_batch
+from repro.engine import DartEngine, get_optimizer, route_policy
 from repro.models import get_family
-from repro.runtime.server import DartServer
 from repro.runtime.trainer import Trainer, TrainConfig
 
 BUDGET = os.environ.get("REPRO_BENCH_BUDGET", "quick")
 SCALE = {"quick": 1, "std": 4, "full": 10}[BUDGET]
+
+#: Table I column order: display name -> registered optimizer.
+TABLE1_METHODS = {"Static": "static", "BranchyNet": "branchynet",
+                  "RL-Agent": "rl_agent", "DART": "joint_dp"}
 
 
 def train_model(model_cfg, data_cfg, *, steps, batch=32, lr=3e-3,
@@ -46,26 +49,8 @@ def train_model(model_cfg, data_cfg, *, steps, batch=32, lr=3e-3,
 
 
 def stage_macs(model_cfg, params, img_shape) -> np.ndarray:
-    """Cumulative MACs per exit from XLA cost analysis of each stage+exit."""
-    fam = get_family(model_cfg)
-    n = fam.num_stages(model_cfg)
-    x = jnp.zeros((1,) + img_shape)
-    h = fam.apply_stem(params, x, model_cfg)
-    cum, total = [], 0.0
-
-    def flops_of(fn, *args):
-        c = jax.jit(fn).lower(*args).compile().cost_analysis() or {}
-        return float(c.get("flops", 0.0))
-
-    for s in range(n):
-        total += flops_of(lambda p, h, s=s: fam.apply_stage(p, h, s,
-                                                            model_cfg),
-                          params, h)
-        h = fam.apply_stage(params, h, s, model_cfg)
-        head = flops_of(lambda p, h, s=s: fam.apply_exit(p, h, s, model_cfg),
-                        params, h)
-        cum.append((total + head) / 2.0)      # flops -> MACs
-    return np.asarray(cum)
+    """Cumulative MACs per exit (XLA cost analysis, via the engine)."""
+    return DartEngine.from_config(model_cfg, params).measure_costs(img_shape)
 
 
 def stage_times(model_cfg, params, img_shape, batch=64, iters=5):
@@ -74,7 +59,6 @@ def stage_times(model_cfg, params, img_shape, batch=64, iters=5):
     n = fam.num_stages(model_cfg)
     x = jnp.zeros((batch,) + img_shape)
     h = fam.apply_stem(params, x, model_cfg)
-    stem_fn = jax.jit(lambda p, x: fam.apply_stem(p, x, model_cfg))
     times = []
     h_cur = h
     for s in range(n):
@@ -93,93 +77,58 @@ def stage_times(model_cfg, params, img_shape, batch=64, iters=5):
     return np.asarray(times)
 
 
-@dataclasses.dataclass
-class Calibration:
-    data: POL.CalibrationData
-    entropy: np.ndarray           # (n, E) for BranchyNet
-    preds: np.ndarray             # (n, E)
-    labels: np.ndarray
-
-
-def collect_calibration(model_cfg, params, data_cfg, *, n=512, split="eval",
-                        offset=0) -> Calibration:
-    fam = get_family(model_cfg)
-    confs, ents, preds, corrects, alphas, labels = [], [], [], [], [], []
-    bs = 64
-    for start in range(offset, offset + n, bs):
-        x, y = make_batch(data_cfg, range(start, start + bs), split=split)
-        out = fam.forward(params, jnp.asarray(x), model_cfg)
-        logits = out["exit_logits"]                      # (E, B, C)
-        conf = np.asarray(R.confidence_from_logits(logits))
-        ent = np.asarray(R.entropy_from_logits(logits))
-        pred = np.asarray(jnp.argmax(logits, axis=-1))
-        alpha = np.asarray(DIFF.image_difficulty(jnp.asarray(x)))
-        confs.append(conf.T); ents.append(ent.T); preds.append(pred.T)
-        corrects.append((pred == y[None]).T.astype(float))
-        alphas.append(alpha); labels.append(y)
-    conf = np.concatenate(confs); ent = np.concatenate(ents)
-    pred = np.concatenate(preds); corr = np.concatenate(corrects)
-    alpha = np.concatenate(alphas); y = np.concatenate(labels)
-    return Calibration(
-        POL.CalibrationData(conf, corr, alpha, np.ones(conf.shape[1]), y),
-        ent, pred, y)
-
-
 def evaluate_methods(model_cfg, params, data_cfg, *, n_eval=512,
                      beta_opt=0.5, img_shape=None, estimator_overhead=True):
-    """The full Table-I protocol for one model.  Returns rows (list of
-    dicts) + diagnostics."""
+    """The full Table-I protocol for one model, entirely through the
+    engine API.  Returns rows (list of dicts) + diagnostics."""
     img_shape = img_shape or (data_cfg.img_res, data_cfg.img_res,
                               data_cfg.channels)
-    cum_macs = stage_macs(model_cfg, params, img_shape)
-    cum_norm = cum_macs / cum_macs[-1]
+    engine = DartEngine.from_config(model_cfg, params, beta_opt=beta_opt)
+    cum_macs = engine.measure_costs(img_shape)
     s_times = stage_times(model_cfg, params, img_shape)
     cum_times = np.cumsum(s_times)
 
-    cal = collect_calibration(model_cfg, params, data_cfg, n=512, offset=0)
-    cal.data.cum_costs = cum_norm
-    hold = collect_calibration(model_cfg, params, data_cfg, n=n_eval,
-                               offset=1024)
-    hold.data.cum_costs = cum_norm
-
-    dart_pol = POL.optimize_joint_dp(cal.data, beta_opt=beta_opt)
-    branchy = BL.fit_branchynet(cal.entropy, cal.data.correct, cum_norm,
-                                beta_opt=beta_opt)
-    rl = BL.fit_rl_agent(cal.data, beta_opt=beta_opt,
-                         epochs=4 * SCALE)
+    cal = engine.collect_calibration(data_cfg, n=512, offset=0)
+    hold = engine.collect_calibration(data_cfg, n=n_eval, offset=1024)
 
     est_macs = DIFF.estimator_flops(*img_shape) / 2.0
-    n = hold.data.conf.shape[0]
-    mean_alpha = float(hold.data.alpha.mean())
+    est_t = 0.02 * cum_times[-1]
+    mean_alpha = float(hold.alpha.mean())
+    n = hold.conf.shape[0]
+    e = hold.conf.shape[1]
 
-    def routed_measure(name, idx, extra_macs=0.0, extra_time=0.0):
-        acc = float(hold.data.correct[np.arange(n), idx].mean())
+    def measure(name, idx, extra_macs=0.0, extra_time=0.0):
+        acc = float(hold.correct[np.arange(n), idx].mean())
         macs = float(cum_macs[idx].mean() + extra_macs)
         t = float(cum_times[idx].mean() + extra_time)
         return DAES.MethodMeasurement(name, acc, t, macs)
 
-    e = hold.data.conf.shape[1]
-    m_static = routed_measure("Static", BL.static_route(hold.data.conf))
-    m_branchy = routed_measure("BranchyNet", branchy.route(hold.entropy))
-    m_rl = routed_measure("RL-Agent", rl.route(hold.data.conf))
-    dart_idx = np.asarray(TH.simulate_routing(
-        hold.data.conf, hold.data.alpha, dart_pol.tau, dart_pol.coef,
-        dart_pol.beta_diff))
-    est_t = 0.02 * cum_times[-1] if estimator_overhead else 0.0
-    m_dart = routed_measure("DART", dart_idx,
-                            extra_macs=est_macs if estimator_overhead else 0,
-                            extra_time=est_t)
+    measurements, routes, dart_pol = [], {}, None
+    for name, opt in TABLE1_METHODS.items():
+        kw = {"epochs": 4 * SCALE} if opt == "rl_agent" else {}
+        if opt == "joint_dp":
+            pol = engine.calibrate(cal, **kw)         # installs the policy
+            dart_pol = pol
+        else:
+            pol = get_optimizer(opt)(cal, beta_opt=beta_opt, **kw)
+        idx = route_policy(pol, hold)
+        routes[name] = idx
+        overhead = estimator_overhead and opt == "joint_dp"
+        measurements.append(measure(
+            name, idx, extra_macs=est_macs if overhead else 0.0,
+            extra_time=est_t if overhead else 0.0))
 
+    m_static = measurements[0]
     rows = [DAES.summary_row(m_static, m, mean_alpha)
-            for m in (m_static, m_branchy, m_rl, m_dart)]
+            for m in measurements]
     diag = {
         "exit_dist": {
-            "dart": np.bincount(dart_idx, minlength=e).tolist(),
-            "branchy": np.bincount(branchy.route(hold.entropy),
+            "dart": np.bincount(routes["DART"], minlength=e).tolist(),
+            "branchy": np.bincount(routes["BranchyNet"],
                                    minlength=e).tolist(),
         },
         "mean_alpha": mean_alpha,
-        "dart_tau": dart_pol.tau.tolist(),
+        "dart_tau": np.asarray(dart_pol.tau).tolist(),
         "dart_J": dart_pol.objective,
         "cum_macs": cum_macs.tolist(),
     }

@@ -17,8 +17,8 @@ from repro.configs import registry
 from repro.core import adaptive as AD
 from repro.core.routing import DartParams
 from repro.data.datasets import DatasetConfig, make_batch
-from repro.runtime.server import DartServer
-from benchmarks.common import SCALE, train_model, stage_macs
+from repro.engine import DartEngine
+from benchmarks.common import SCALE, train_model
 
 CIFAR = DatasetConfig(name="synth-cifar", img_res=32, channels=3,
                       n_train=4096, n_eval=4096)
@@ -44,20 +44,22 @@ def main(outdir="artifacts/bench"):
     cfg = dataclasses.replace(tb["alexnet"], channels=(16, 32, 48, 32, 32),
                               fc_dims=(128, 64))
     tr = train_model(cfg, CIFAR, steps=150 * SCALE, batch=32)
-    cum = stage_macs(cfg, tr.params, (32, 32, 3))
     dart = DartParams(tau=jnp.asarray([0.55, 0.6]), coef=jnp.ones(2),
                       beta_diff=0.3)
     acfg = AD.AdaptiveConfig(n_exits=3, n_classes=10, window=512,
                              eta=0.02, a_target=0.85, ucb_enabled=False)
-    srv = DartServer(cfg, tr.params, dart, cum_costs=cum / cum[-1],
-                     adaptive_cfg=acfg, adapt=True, update_every=64)
+    engine = DartEngine.from_config(
+        cfg, tr.params, dart=dart,
+        adaptive_cfg=acfg, adapt=True, update_every=64)
+    cum = engine.measure_costs((32, 32, 3))
+    engine.cum_costs = cum / cum[-1]
     traj = {k: [] for k in CLASSES}
     steps = 40 * SCALE
     for step in range(steps):
         x, y = make_batch(CIFAR, range(step * 64, (step + 1) * 64),
                           split="eval")
-        srv.infer_batch(x)
-        coef = np.asarray(srv.astate["coef_class"])    # (10, E-1)
+        engine.infer(x, mode="compacted")
+        coef = np.asarray(engine.state.adaptive["coef_class"])  # (10, E-1)
         for name, c in CLASSES.items():
             traj[name].append(float(coef[c].mean()))
     print("\n== Fig. 2 — class-aware coefficient evolution ==")

@@ -1,9 +1,13 @@
-"""DART on a diffusion transformer: early-exit denoising (DESIGN.md §3).
+"""DART on a diffusion transformer: early-exit denoising (DESIGN.md §3)
+through the engine's pluggable strategies.
 
 A small DiT is trained with per-exit ε-heads (Eq. 18 with MSE); DDIM
 sampling then exits each step at the earliest CONVERGED head, gated by the
-latent+timestep difficulty.  High-noise (early) steps are easy — expect
-shallow exits there and deeper exits near the end of the trajectory.
+latent+timestep difficulty.  The exit criterion and difficulty estimator
+are the registered ``diffusion-convergence`` / ``latent`` strategies —
+the same engine that serves classifiers routes diffusion exits.
+High-noise (early) steps are easy — expect shallow exits there and
+deeper exits near the end of the trajectory.
 
 Run:  PYTHONPATH=src python examples/dit_early_exit.py
 """
@@ -13,9 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import routing as R
 from repro.core.routing import DartParams
 from repro.data.datasets import DatasetConfig
+from repro.engine import DartEngine
 from repro.models.dit import (DiTConfig, dit_forward, cosine_alpha_bar)
 from repro.runtime.trainer import Trainer, TrainConfig
 
@@ -32,8 +36,12 @@ def main():
     tr.run()
     print("loss:", [round(h["loss"], 3) for h in tr.history])
 
-    dart = DartParams(tau=jnp.asarray([0.93, 0.93]), coef=jnp.ones(2),
-                      beta_diff=0.05)
+    engine = DartEngine.from_config(
+        CFG, tr.params,
+        dart=DartParams(tau=jnp.asarray([0.93, 0.93]), coef=jnp.ones(2),
+                        beta_diff=0.05),
+        confidence="diffusion-convergence", difficulty="latent",
+        adapt=False)
     abar = cosine_alpha_bar()
     b = 8
     key = jax.random.key(0)
@@ -45,8 +53,10 @@ def main():
     def denoise(xt, t, t_prev, y):
         out = dit_forward(tr.params, xt, t, y, CFG)
         eps_stack = jnp.stack([e[..., :4] for e in out["exit_eps"]])
-        routed = R.diffusion_routed(eps_stack, xt, jnp.sqrt(abar[t]), dart)
-        eps = routed["eps"]
+        routed = engine.route(eps_stack, xt, signal_frac=jnp.sqrt(abar[t]))
+        eps = jnp.take_along_axis(
+            eps_stack, routed["exit_idx"][None, :, None, None, None],
+            axis=0)[0]
         at = abar[t][:, None, None, None]
         ap = abar[t_prev][:, None, None, None]
         x0 = (xt - jnp.sqrt(1 - at) * eps) / jnp.sqrt(at)

@@ -1,5 +1,8 @@
 """Fault-tolerance walkthrough: crash → restart → identical trajectory,
-plus heartbeat failure detection and straggler shard reassignment.
+heartbeat failure detection, straggler shard reassignment, and serving-
+state recovery (the engine's FULL session state — thresholds, §II.C
+sliding window, UCB arms, counters — is ONE pytree, so a serving replica
+restarts exactly where it died).
 
 Run:  PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -8,7 +11,8 @@ import time
 
 import numpy as np
 
-from repro.data.datasets import DatasetConfig
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.engine import DartEngine
 from repro.models.cnn_zoo import AlexNetConfig
 from repro.runtime.fault import (HeartbeatMonitor, ShardPlan,
                                  StragglerPolicy,
@@ -67,6 +71,26 @@ def main():
     sizes = {w: len(ix) for w, ix in plan.assignments.items()}
     print("new shard sizes:", sizes, "(total",
           sum(sizes.values()), "— no data lost)")
+
+    # 4. serving-state recovery -------------------------------------------
+    print("\nserving replica crash: EngineState round-trips as one pytree")
+    engine = DartEngine.from_config(MODEL, tr.params, adapt=True,
+                                    update_every=16)
+    x, _ = make_batch(DATA, range(48), split="eval")
+    engine.infer(x, mode="compacted")
+    ckdir = tempfile.mkdtemp()
+    engine.save_state(ckdir, step=0)
+
+    replica = DartEngine.from_config(MODEL, tr.params, adapt=True,
+                                     update_every=16)
+    replica.restore_state(ckdir)
+    same = (int(replica.state.served) == int(engine.state.served)
+            and int(replica.state.adaptive["seen"])
+            == int(engine.state.adaptive["seen"]))
+    a, b2 = engine.infer(x[:16], "compacted"), replica.infer(x[:16],
+                                                            "compacted")
+    print(f"counters restored: {same}; post-restore decisions identical: "
+          f"{bool(np.array_equal(a['exit_idx'], b2['exit_idx']))}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """DART on a language model: train a small multi-exit LM, then decode with
-REAL per-token layer skipping + CALM state propagation (DESIGN.md §3).
+REAL per-token layer skipping + CALM state propagation (DESIGN.md §3),
+through the ``repro.engine`` LM decode engine.
 
 Run:  PYTHONPATH=src python examples/lm_early_exit.py
 """
@@ -8,8 +9,8 @@ import jax.numpy as jnp
 
 from repro.core.routing import DartParams
 from repro.data.datasets import DatasetConfig, make_batch
+from repro.engine import LMDecodeEngine
 from repro.models.transformer_lm import LMConfig
-from repro.runtime.lm_server import LMDecodeServer
 from repro.runtime.trainer import Trainer, TrainConfig
 
 DATA = DatasetConfig(name="tokens", n_train=2048)
@@ -27,7 +28,7 @@ def main():
 
     dart = DartParams(tau=jnp.asarray([0.35, 0.4]), coef=jnp.ones(2),
                       beta_diff=0.15)
-    srv = LMDecodeServer(CFG, tr.params, dart)
+    srv = LMDecodeEngine(CFG, tr.params, dart)
 
     prompts, _ = make_batch(DATA, range(8), kind="tokens", seq_len=17,
                             vocab=CFG.vocab)

@@ -1,9 +1,11 @@
-"""Online-adaptation serving demo (paper §II.C).
+"""Online-adaptation serving demo (paper §II.C) on the engine API.
 
-A DartServer handles a request stream whose class mix SHIFTS midway
-(deployment drift).  The adaptive manager — sliding-window stats,
+A DartEngine session handles a request stream whose class mix SHIFTS
+midway (deployment drift).  The adaptive manager — sliding-window stats,
 temporal EMA (Eq. 13), class-aware updates from pseudo-labels (Eq. 14),
-UCB1 strategy selection (Eq. 15) — retunes coefficients online.
+UCB1 strategy selection (Eq. 15) — retunes coefficients online; the
+whole serving state (thresholds + window + counters) lives in ONE pytree
+(``engine.state``) and is checkpointed atomically mid-stream.
 
 Run:  PYTHONPATH=src python examples/serve_adaptive.py
 """
@@ -11,6 +13,7 @@ import os
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import dataclasses
+import tempfile
 
 import jax.numpy as jnp
 import numpy as np
@@ -19,8 +22,8 @@ from repro.configs import registry
 from repro.core import adaptive as AD
 from repro.core.routing import DartParams
 from repro.data.datasets import DatasetConfig, make_batch
-from repro.runtime.server import DartServer
-from benchmarks.common import stage_macs, train_model
+from repro.engine import DartEngine
+from benchmarks.common import train_model
 
 CIFAR = DatasetConfig(name="synth-cifar", n_train=2048, n_eval=4096)
 
@@ -38,28 +41,41 @@ def main():
     cfg = dataclasses.replace(tb["alexnet"], channels=(16, 32, 48, 32, 32),
                               fc_dims=(128, 64))
     tr = train_model(cfg, CIFAR, steps=80, batch=32)
-    cum = stage_macs(cfg, tr.params, (32, 32, 3))
-    dart = DartParams(tau=jnp.asarray([0.5, 0.55]), coef=jnp.ones(2),
-                      beta_diff=0.3)
     acfg = AD.AdaptiveConfig(n_exits=3, n_classes=10, window=512,
                              ucb_enabled=True)
-    srv = DartServer(cfg, tr.params, dart, cum_costs=cum / cum[-1],
-                     adaptive_cfg=acfg, adapt=True, update_every=64)
+    engine = DartEngine.from_config(
+        cfg, tr.params,
+        dart=DartParams(tau=jnp.asarray([0.5, 0.55]), coef=jnp.ones(2),
+                        beta_diff=0.3),
+        adaptive_cfg=acfg, adapt=True, update_every=64)
+    engine.measure_costs((32, 32, 3))
+    engine.cum_costs = engine.cum_costs / engine.cum_costs[-1]
 
     print("phase,step,mean_exit,mean_macs,coef_mean,strategy")
     for phase in (0, 1):
         for step in range(12):
             x, y = stream(phase, step)
-            out = srv.infer_batch(x)
+            out = engine.infer(x, mode="compacted")
             coef = float(np.mean(np.asarray(
-                AD.effective_coef(srv.astate, acfg))))
+                AD.effective_coef(engine.state.adaptive, acfg))))
+            strategy = AD.STRATEGIES[
+                int(engine.state.adaptive["active_strategy"])]
             print(f"{phase},{step},{out['exit_idx'].mean():.2f},"
-                  f"{out['macs'].mean():.3f},{coef:.4f},"
-                  f"{AD.STRATEGIES[int(srv.astate['active_strategy'])]}")
-    print("\nexit counts:", srv.stats.exit_counts.tolist())
-    print(f"served {srv.stats.served} requests, "
-          f"mean normalized MACs "
-          f"{srv.stats.total_macs/srv.stats.served:.3f} (static = 1.0)")
+                  f"{out['macs'].mean():.3f},{coef:.4f},{strategy}")
+        if phase == 0:
+            # checkpoint the FULL serving state mid-stream (one pytree)
+            ckdir = tempfile.mkdtemp()
+            engine.save_state(ckdir, step=0)
+            seen = int(engine.state.adaptive["seen"])
+            engine.restore_state(ckdir)
+            assert int(engine.state.adaptive["seen"]) == seen
+            print(f"# state checkpointed + restored at phase boundary "
+                  f"(window seen={seen})")
+
+    stats = engine.stats()
+    print("\nexit counts:", stats["exit_counts"].tolist())
+    print(f"served {stats['served']} requests, "
+          f"mean normalized MACs {stats['mean_macs']:.3f} (static = 1.0)")
 
 
 if __name__ == "__main__":

@@ -41,12 +41,15 @@ class CalibrationData:
     cum_costs:(E,)   cumulative normalized compute up to each exit
                      (full network = 1.0)
     labels:   (n,) optional class ids (for class-aware adaptation)
+    entropy:  (n, E) optional per-exit softmax entropy (lets entropy-
+                     criterion baselines like BranchyNet fit faithfully)
     """
     conf: np.ndarray
     correct: np.ndarray
     alpha: np.ndarray
     cum_costs: np.ndarray
     labels: np.ndarray | None = None
+    entropy: np.ndarray | None = None
 
     @property
     def n_exits(self) -> int:
@@ -60,7 +63,8 @@ class CalibrationData:
         tr, va = perm[:k], perm[k:]
         pick = lambda idx: CalibrationData(
             self.conf[idx], self.correct[idx], self.alpha[idx],
-            self.cum_costs, None if self.labels is None else self.labels[idx])
+            self.cum_costs, None if self.labels is None else self.labels[idx],
+            None if self.entropy is None else self.entropy[idx])
         return pick(tr), pick(va)
 
 

@@ -1,0 +1,42 @@
+"""repro.engine — the unified, pluggable DART inference session API.
+
+The paper's three contributions (difficulty estimation §II.A, joint
+policy optimization §II.B, adaptive coefficient management §II.C) used
+to be wired together by hand at every call site.  This package is the
+single composable façade over that lifecycle:
+
+    from repro.engine import DartEngine
+
+    engine = DartEngine.from_config(model_cfg, params)   # 1. wire up
+    engine.calibrate(cal_data)                           # 2. fit policy
+    out = engine.infer(x, mode="compacted")              # 3. serve
+    engine.update()                                      # 4. adapt
+    engine.stats()                                       # 5. meter
+
+Pieces:
+
+* :class:`DartEngine`     — the session object (engine.py)
+* :class:`EngineState`    — ALL mutable serving state as one pytree:
+  thresholds + §II.C sliding window + counters.  Checkpoint-, jit- and
+  shard-compatible as a single object (state.py)
+* :mod:`registry`         — string-keyed strategy tables: confidence
+  functionals, difficulty estimators, policy optimizers (incl. the
+  Table I baselines behind the same ``PolicyOptimizer`` protocol)
+* :class:`BatchCompactor` — bucket-padded batch compaction shared by the
+  staged classifier path and the LM decode engine (compactor.py)
+* :class:`LMDecodeEngine` — early-exit autoregressive decoding with
+  CALM-style KV propagation (lm.py)
+
+Legacy entry points (``repro.runtime.server.DartServer``,
+``repro.runtime.lm_server.LMDecodeServer``) remain importable as thin
+shims that delegate here.
+"""
+from repro.engine import registry
+from repro.engine.compactor import BatchCompactor, BatchTooLarge
+from repro.engine.engine import DartEngine
+from repro.engine.lm import LMDecodeEngine
+from repro.engine.registry import (get_confidence, get_difficulty,
+                                   get_optimizer, register_confidence,
+                                   register_difficulty, register_optimizer,
+                                   route_policy)
+from repro.engine.state import EngineState

@@ -1,0 +1,93 @@
+"""BatchCompactor — bucket-padded batch compaction for staged serving.
+
+Both serving engines (the staged classifier engine and the LM decode
+engine) run survivors of each stage through power-of-two buckets so the
+number of distinct compiled shapes is bounded by #stages × #buckets.
+This class centralizes that machinery:
+
+* ``bucket_for(n)``   — smallest bucket ≥ n; RAISES on overflow instead
+  of silently clamping (the old ``_next_bucket`` returned the largest
+  bucket for any ``n > max``, making ``pad = bucket - n`` negative and
+  corrupting ``jnp.concatenate`` pads).
+* ``chunks(n)``       — split an oversized request into ≤ max_bucket
+  spans so callers can serve arbitrarily large batches.
+* ``pad(arr, bucket, fill)``      — pad axis 0 up to the bucket.
+* ``pad_tree(tree, bucket)``      — same, mapped over a pytree.
+* ``gather(arr, idx, bucket)``    — compact survivors (+ pad) in one
+  ``take``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BUCKETS = tuple(2 ** i for i in range(0, 11))       # 1 .. 1024
+
+
+class BatchTooLarge(ValueError):
+    """Raised when a batch exceeds the largest bucket (use ``chunks``)."""
+
+
+class BatchCompactor:
+    def __init__(self, buckets=None):
+        buckets = DEFAULT_BUCKETS if buckets is None \
+            else tuple(sorted(buckets))
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"invalid buckets {buckets!r}")
+        self.buckets = buckets
+
+    @property
+    def max_bucket(self) -> int:
+        return self.buckets[-1]
+
+    # ------------------------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        if n > self.max_bucket:
+            raise BatchTooLarge(
+                f"batch of {n} exceeds largest bucket {self.max_bucket}; "
+                f"split it with .chunks({n})")
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise BatchTooLarge(f"no bucket for n={n} in {self.buckets}")
+
+    def chunks(self, n: int) -> list[tuple[int, int]]:
+        """[(start, end)) spans covering an n-sample request, each span
+        no larger than the biggest bucket."""
+        m = self.max_bucket
+        return [(s, min(s + m, n)) for s in range(0, max(n, 0), m)]
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def pad(arr, bucket: int, fill=0.0):
+        """Pad axis 0 of ``arr`` (jnp or np) up to ``bucket`` with
+        ``fill``."""
+        n = arr.shape[0]
+        pad = bucket - n
+        if pad < 0:
+            raise BatchTooLarge(f"array of {n} rows > bucket {bucket}")
+        if pad == 0:
+            return arr
+        if isinstance(arr, np.ndarray):
+            return np.concatenate(
+                [arr, np.full((pad,) + arr.shape[1:], fill, arr.dtype)])
+        return jnp.concatenate(
+            [arr, jnp.full((pad,) + arr.shape[1:], fill, arr.dtype)])
+
+    def pad_tree(self, tree, bucket: int, fill=0.0):
+        return jax.tree.map(lambda a: self.pad(a, bucket, fill), tree)
+
+    @staticmethod
+    def gather(arr, idx, bucket: int | None = None):
+        """Compact rows ``idx`` of ``arr`` (and optionally re-pad to a
+        bucket by repeating row 0 — callers mask those lanes)."""
+        idx = jnp.asarray(idx)
+        if bucket is not None:
+            pad = bucket - idx.shape[0]
+            if pad < 0:
+                raise BatchTooLarge(
+                    f"{idx.shape[0]} survivors > bucket {bucket}")
+            if pad:
+                idx = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
+        return jnp.take(arr, idx, axis=0)

@@ -1,0 +1,206 @@
+"""LM decode engine — early-exit autoregressive serving on the DART gate.
+
+The LM analogue of :class:`repro.engine.DartEngine`'s compacted mode
+(re-homed from ``repro.runtime.lm_server``, now built on the shared
+:class:`BatchCompactor`): per decode step the layer stack runs
+stage-by-stage; exited samples *skip* the remaining stages — their KV
+entries are filled by CALM-style state propagation
+(``lm_kv_propagate``) — and survivors (plus their cache rows) are
+compacted into power-of-two buckets.
+
+The exit gate uses the ``lm-token`` confidence functional and the
+``token_difficulty_ema`` decode-time difficulty estimator from the
+engine registries.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import difficulty as DIFF
+from repro.core.routing import DartParams
+from repro.engine import registry as REG
+from repro.engine.compactor import BatchCompactor
+from repro.models import layers as L
+from repro.models import transformer_lm as TLM
+
+
+def _stages(cfg: TLM.LMConfig):
+    """[(start, end)) layer ranges; stage k ends at exit_layers[k]."""
+    bounds = [0] + [e + 1 for e in sorted(cfg.exit_layers)] + [cfg.n_layers]
+    return [(a, b) for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+class LMDecodeEngine:
+    def __init__(self, cfg: TLM.LMConfig, params, dart: DartParams, *,
+                 buckets=(1, 2, 4, 8, 16, 32, 64, 128), use_kernel=False,
+                 confidence: str = "lm-token"):
+        assert not cfg.layer_scan
+        self.cfg = cfg
+        self.params = params
+        self.dart = dart
+        self.compactor = BatchCompactor(buckets)
+        self.use_kernel = use_kernel
+        self._conf_fn = REG.get_confidence(confidence)
+        self.stages = _stages(cfg)
+        self.exit_names = [str(i) for i in sorted(cfg.exit_layers)] \
+            + ["final"]
+        self.stats_exit = np.zeros(len(self.stages), np.int64)
+        self.layers_run = 0
+        self.layers_skipped = 0
+
+        cfgc = cfg
+
+        def stage_fn(params, x, cache_sl, cache_index, a, b):
+            cos, sin = L.rope_freqs(
+                cfgc.qk_rope_dim if cfgc.attn_kind == "mla" else cfgc.hd,
+                cache_sl[0]["c_kv"].shape[1] if cfgc.attn_kind == "mla"
+                else cache_sl[0]["k"].shape[1], cfgc.rope_theta)
+            new_sl = []
+            for j, i in enumerate(range(a, b)):
+                p = params["layers"][i]
+                h = L.rmsnorm(p["attn_norm"], x)
+                if cfgc.attn_kind == "mla":
+                    att, c = L.mla_decode(p["attn"], h, cos, sin,
+                                          cache_sl[j], cache_index)
+                else:
+                    att, c = L.gqa_decode(p["attn"], h, cos, sin,
+                                          cache_sl[j], cache_index)
+                new_sl.append(c)
+                x = x + att
+                h2 = L.rmsnorm(p["ffn_norm"], x)
+                if cfgc.layer_is_moe(i):
+                    from repro.models.moe import moe_apply
+                    f, _ = moe_apply(p["moe"], h2, cfgc.moe,
+                                     ep_mode=cfgc.moe_ep_mode)
+                else:
+                    f = L.swiglu(p["ffn"], h2)
+                x = x + f
+            return x, new_sl
+
+        self._stage_fns = [
+            jax.jit(partial(stage_fn, a=a, b=b), static_argnames=())
+            for a, b in self.stages]
+        self._exit_logits = [
+            jax.jit(partial(lambda params, h, name: TLM.exit_logits(
+                params, cfgc, h, name), name=n)) for n in self.exit_names]
+        self._propagate = [
+            jax.jit(partial(lambda params, h, cache, idx, fl:
+                            TLM.lm_kv_propagate(params, h, cfgc, cache, idx,
+                                                from_layer=fl), fl=b))
+            for _, b in self.stages]
+        self._embed = jax.jit(lambda params, t: L.embed(
+            params["embed"], t).astype(cfgc.compute_dtype))
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch, max_len):
+        return TLM.lm_init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, tokens, cache):
+        cache, _ = TLM.lm_prefill(self.params, jnp.asarray(tokens),
+                                  self.cfg, cache)
+        return cache
+
+    def decode_step(self, tokens, cache, cache_index, alpha):
+        """tokens: (B,) int; cache: full-depth list; alpha: (B,) difficulty.
+        Returns (next_token (B,), exit_stage (B,), new_cache, new_alpha)."""
+        b = tokens.shape[0]
+        x_full = self._embed(self.params, jnp.asarray(tokens)[:, None])
+        alpha = np.asarray(DIFF.token_difficulty_ema(jnp.asarray(alpha),
+                                                     x_full))
+        tau = np.asarray(self.dart.tau, np.float32)
+        coef = np.asarray(self.dart.coef, np.float32)
+
+        out_tok = np.zeros(b, np.int64)
+        out_stage = np.zeros(b, np.int64)
+        active = np.arange(b)
+        x = x_full
+        n_stages = len(self.stages)
+        cache = list(cache)
+
+        for s, (a, bnd) in enumerate(self.stages):
+            n = len(active)
+            bucket = self.compactor.bucket_for(n)
+            act = jnp.asarray(active)
+            # gather cache rows for the active set (+pad with row 0)
+            gather_idx = self.compactor.pad(np.asarray(active), bucket,
+                                            fill=0).astype(np.int64)
+            cache_sl = [jax.tree.map(
+                lambda c: jnp.take(c, jnp.asarray(gather_idx), axis=0),
+                cache[i]) for i in range(a, bnd)]
+            x_pad = self.compactor.pad(x, bucket)
+            x_new, new_sl = self._stage_fns[s](self.params, x_pad, cache_sl,
+                                               cache_index)
+            # scatter updated cache rows back
+            for j, i in enumerate(range(a, bnd)):
+                cache[i] = jax.tree.map(
+                    lambda full, sl: full.at[act].set(sl[:n]),
+                    cache[i], new_sl[j])
+            self.layers_run += (bnd - a) * n
+
+            logits = self._exit_logits[s](self.params, x_new[:n, 0])
+            conf = self._conf_fn(logits, use_kernel=self.use_kernel)
+            pred = jnp.argmax(logits, -1)
+            conf, pred = np.asarray(conf), np.asarray(pred)
+
+            if s < n_stages - 1:
+                eff = np.clip(coef[s] * tau[s]
+                              + self.dart.beta_diff * alpha[active], 0, 1)
+                fire = conf > eff
+            else:
+                fire = np.ones(n, bool)
+            done = active[fire]
+            out_tok[done] = pred[fire]
+            out_stage[done] = s
+            self.stats_exit[s] += int(fire.sum())
+
+            if s < n_stages - 1 and fire.any():
+                # CALM state propagation for the exited rows
+                h_exit = x_new[:n][jnp.asarray(np.nonzero(fire)[0])]
+                sub = [jax.tree.map(lambda c: jnp.take(
+                    c, jnp.asarray(done), axis=0), cache[i])
+                    for i in range(len(cache))]
+                sub = self._propagate[s](self.params, h_exit[:, 0], sub,
+                                         cache_index)
+                for i in range(self.stages[s][1], self.cfg.n_layers):
+                    cache[i] = jax.tree.map(
+                        lambda full, sl: full.at[jnp.asarray(done)].set(sl),
+                        cache[i], sub[i])
+                self.layers_skipped += \
+                    (self.cfg.n_layers - bnd) * int(fire.sum())
+            keep = ~fire
+            if not keep.any():
+                break
+            x = x_new[:n][jnp.asarray(np.nonzero(keep)[0])]
+            active = active[keep]
+        return out_tok, out_stage, cache, alpha
+
+    def generate(self, prompt_tokens: np.ndarray, n_new: int,
+                 max_len: int | None = None):
+        """prompt_tokens: (B, S0).  Greedy generation with early exits.
+        Batches larger than the biggest bucket are split into chunks
+        (each chunk gets its own KV cache)."""
+        b, s0 = prompt_tokens.shape
+        if b > self.compactor.max_bucket:
+            outs, stgs = [], []
+            for a, z in self.compactor.chunks(b):
+                o, st = self.generate(prompt_tokens[a:z], n_new, max_len)
+                outs.append(o)
+                stgs.append(st)
+            return np.concatenate(outs), np.concatenate(stgs)
+        max_len = max_len or (s0 + n_new + 1)
+        cache = self.init_cache(b, max_len)
+        cache = self.prefill(prompt_tokens[:, :-1], cache)
+        alpha = np.full((b,), 0.5, np.float32)
+        toks = prompt_tokens[:, -1]
+        out = []
+        stages = []
+        for t in range(n_new):
+            toks, stage, cache, alpha = self.decode_step(
+                toks, cache, s0 - 1 + t, alpha)
+            out.append(toks.copy())
+            stages.append(stage.copy())
+        return np.stack(out, 1), np.stack(stages, 1)

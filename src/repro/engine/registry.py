@@ -1,0 +1,254 @@
+"""String-keyed strategy registries for the DART engine.
+
+Mirrors the style of ``configs/registry.py``: every pluggable piece of
+the pipeline is looked up by name, so entry points can expose
+``--confidence/--difficulty/--optimizer`` flags and new strategies can be
+added without touching call sites (the EENet/Laskaridis "exit policy as a
+swappable strategy" design).
+
+Three tables:
+
+* ``CONFIDENCE``  — raw exit outputs → (E, B) confidence scores, larger
+  = more confident.  Kernel-accelerated paths opt in via ``use_kernel``.
+* ``DIFFICULTY``  — model inputs → (B,) difficulty scores in [0, 1]
+  (§II.A estimators + domain adapters).
+* ``OPTIMIZERS``  — ``PolicyOptimizer`` implementations: calibration
+  data → ``PolicyResult`` (§II.B solvers + the Table I baselines).
+
+A ``PolicyOptimizer`` is any callable
+``(data: CalibrationData, *, beta_opt: float, **kw) -> PolicyResult``.
+Baselines that do not natively route on adapted confidence thresholds
+(BranchyNet, RL-Agent) project their policy onto the Eq. 19 runtime form
+and additionally stash their native router under
+``diagnostics["router"]`` (a ``CalibrationData -> exit_idx`` callable)
+so offline evaluation stays faithful to the original criterion.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as BL
+from repro.core import difficulty as DIFF
+from repro.core import policy as POL
+from repro.core import routing as R
+from repro.core import thresholds as TH
+from repro.core.policy import CalibrationData, PolicyResult
+
+CONFIDENCE: dict[str, Callable] = {}
+DIFFICULTY: dict[str, Callable] = {}
+OPTIMIZERS: dict[str, Callable] = {}
+
+
+def _register(table: dict, name: str):
+    def deco(fn):
+        table[name] = fn
+        return fn
+    return deco
+
+
+def register_confidence(name):
+    return _register(CONFIDENCE, name)
+
+
+def register_difficulty(name):
+    return _register(DIFFICULTY, name)
+
+
+def register_optimizer(name):
+    return _register(OPTIMIZERS, name)
+
+
+def _get(table: dict, kind: str, name: str):
+    if name not in table:
+        raise KeyError(f"unknown {kind} strategy {name!r}; "
+                       f"known: {sorted(table)}")
+    return table[name]
+
+
+def get_confidence(name: str) -> Callable:
+    return _get(CONFIDENCE, "confidence", name)
+
+
+def get_difficulty(name: str) -> Callable:
+    return _get(DIFFICULTY, "difficulty", name)
+
+
+def get_optimizer(name: str) -> Callable:
+    return _get(OPTIMIZERS, "optimizer", name)
+
+
+# ---------------------------------------------------------------------------
+# Confidence functionals (raw exit outputs -> (E, B) or (B,) scores)
+# ---------------------------------------------------------------------------
+
+@register_confidence("softmax-max")
+def _conf_softmax_max(logits, *, use_kernel: bool = False):
+    """Max softmax probability (the paper's classifier criterion)."""
+    return R.confidence_from_logits(logits, use_kernel)
+
+
+@register_confidence("entropy")
+def _conf_entropy(logits, *, use_kernel: bool = False):
+    """exp(−H(p)) — entropy mapped onto (0, 1] so that larger = more
+    confident (BranchyNet's criterion under the common gate protocol)."""
+    return jnp.exp(-R.entropy_from_logits(logits))
+
+
+@register_confidence("diffusion-convergence")
+def _conf_diffusion(eps_stack, *, use_kernel: bool = False):
+    """Convergence of consecutive exit ε-predictions (diffusion)."""
+    return R.diffusion_confidence(eps_stack)
+
+
+@register_confidence("lm-token")
+def _conf_lm_token(logits, *, use_kernel: bool = False):
+    """Next-token max softmax probability (CALM-style LM criterion)."""
+    if use_kernel:
+        from repro.kernels.exit_gate import ops as gops
+        return gops.softmax_confidence(logits)[0]
+    return R.confidence_from_logits(logits)
+
+
+# ---------------------------------------------------------------------------
+# Difficulty estimators (inputs -> (B,) in [0, 1])
+# ---------------------------------------------------------------------------
+
+@register_difficulty("image")
+def _diff_image(inputs, cfg: DIFF.DifficultyConfig = DIFF.DEFAULT,
+                use_kernel: bool = False, **kw):
+    return DIFF.estimate(inputs, "image", cfg, use_kernel=use_kernel)
+
+
+@register_difficulty("tokens")
+def _diff_tokens(inputs, cfg: DIFF.DifficultyConfig = DIFF.DEFAULT, **kw):
+    return DIFF.token_difficulty(inputs, cfg)
+
+
+@register_difficulty("latent")
+def _diff_latent(inputs, cfg: DIFF.DifficultyConfig = DIFF.DEFAULT, *,
+                 signal_frac, **kw):
+    return DIFF.latent_difficulty(inputs, signal_frac, cfg)
+
+
+@register_difficulty("zero")
+def _diff_zero(inputs, cfg: DIFF.DifficultyConfig = DIFF.DEFAULT, **kw):
+    """Difficulty-unaware ablation: α ≡ 0 (Eq. 19 collapses to c·τ)."""
+    return jnp.zeros((inputs.shape[0],), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Policy optimizers (§II.B solvers)
+# ---------------------------------------------------------------------------
+
+OPTIMIZERS["joint_dp"] = POL.optimize_joint_dp
+OPTIMIZERS["brute_force"] = POL.optimize_brute_force
+OPTIMIZERS["independent"] = POL.optimize_independent
+
+
+def _objective(data: CalibrationData, idx, beta_opt: float) -> float:
+    n = data.conf.shape[0]
+    acc = float(data.correct[np.arange(n), idx].mean())
+    cost = float(np.asarray(data.cum_costs)[idx].mean())
+    return acc - beta_opt * cost
+
+
+@register_optimizer("static")
+def optimize_static(data: CalibrationData, *, beta_opt=0.5,
+                    **kw) -> PolicyResult:
+    """Table I "Static": never exit early (τ = 1 ⇒ conf > 1 never fires)."""
+    e = data.n_exits
+    idx = BL.static_route(data.conf)
+    return PolicyResult(
+        tau=np.ones(e - 1), coef=np.ones(e - 1), beta_diff=0.0,
+        objective=_objective(data, idx, beta_opt), method="static",
+        diagnostics={"router": lambda d: BL.static_route(d.conf)})
+
+
+@register_optimizer("branchynet")
+def optimize_branchynet(data: CalibrationData, *, beta_opt=0.5,
+                        **kw) -> PolicyResult:
+    """Table I "BranchyNet": fixed entropy thresholds, no difficulty term.
+
+    Fits on ``data.entropy`` when available (the original criterion) and
+    projects onto confidence space by matching per-exit firing quantiles;
+    without entropy it degrades to a fixed-confidence-threshold fit."""
+    e = data.n_exits
+    if data.entropy is not None:
+        pol = BL.fit_branchynet(data.entropy, data.correct,
+                                np.asarray(data.cum_costs),
+                                beta_opt=beta_opt)
+        idx = pol.route(data.entropy)
+        tau = np.empty(e - 1)
+        for i in range(e - 1):
+            fire_frac = float(
+                (data.entropy[:, i] < pol.entropy_thresholds[i]).mean())
+            tau[i] = np.quantile(data.conf[:, i],
+                                 min(max(1.0 - fire_frac, 0.0), 1.0))
+
+        def router(d):
+            if d.entropy is None:       # entropy-less holdout: Eq. 19 form
+                return np.asarray(TH.simulate_routing(
+                    d.conf, np.zeros_like(d.alpha), tau,
+                    np.ones(e - 1), 0.0))
+            return pol.route(d.entropy)
+        diag = {"router": router, "policy": pol}
+    else:
+        grid = np.quantile(data.conf[:, :-1],
+                           [0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.95])
+        ones = np.ones(e - 1)
+        best = (-np.inf, None)
+        for t in grid:
+            cand = np.full(e - 1, t)
+            idx = np.asarray(TH.simulate_routing(
+                data.conf, np.zeros_like(data.alpha), cand, ones, 0.0))
+            j = _objective(data, idx, beta_opt)
+            if j > best[0]:
+                best = (j, cand)
+        tau = best[1]
+        idx = np.asarray(TH.simulate_routing(
+            data.conf, np.zeros_like(data.alpha), tau, np.ones(e - 1), 0.0))
+        diag = {"router": lambda d: np.asarray(TH.simulate_routing(
+            d.conf, np.zeros_like(d.alpha), tau, np.ones(e - 1), 0.0))}
+    return PolicyResult(tau=tau, coef=np.ones(e - 1), beta_diff=0.0,
+                        objective=_objective(data, idx, beta_opt),
+                        method="branchynet", diagnostics=diag)
+
+
+@register_optimizer("rl_agent")
+def optimize_rl_agent(data: CalibrationData, *, beta_opt=0.5, epochs=20,
+                      n_conf_bins=10, seed=0, **kw) -> PolicyResult:
+    """Table I "RL-Agent": tabular Q-learning policy, projected onto
+    per-exit confidence thresholds (smallest bin whose exit-action value
+    dominates for every bin above it)."""
+    pol = BL.fit_rl_agent(data, beta_opt=beta_opt, epochs=epochs,
+                          n_conf_bins=n_conf_bins, seed=seed)
+    e = data.n_exits
+    edges = np.linspace(0.0, 1.0, n_conf_bins + 1)
+    tau = np.ones(e - 1)
+    for i in range(e - 1):
+        cstar = n_conf_bins
+        for c in range(n_conf_bins - 1, -1, -1):
+            if pol.q[i, c, 1] >= pol.q[i, c, 0]:
+                cstar = c
+            else:
+                break
+        tau[i] = edges[cstar] if cstar < n_conf_bins else 1.0
+    idx = pol.route(data.conf)
+    return PolicyResult(
+        tau=tau, coef=np.ones(e - 1), beta_diff=0.0,
+        objective=_objective(data, idx, beta_opt), method="rl_agent",
+        diagnostics={"router": lambda d: pol.route(d.conf), "policy": pol})
+
+
+def route_policy(pol: PolicyResult, data: CalibrationData) -> np.ndarray:
+    """Offline-route a calibration/holdout set under a fitted policy.
+
+    Uses the policy's native router when it has one (entropy criterion,
+    Q-table, …); otherwise simulates Alg. 1 with the Eq. 19 projection."""
+    if pol.diagnostics and "router" in pol.diagnostics:
+        return np.asarray(pol.diagnostics["router"](data))
+    return np.asarray(TH.simulate_routing(
+        data.conf, data.alpha, pol.tau, pol.coef, pol.beta_diff))

@@ -1,0 +1,103 @@
+"""EngineState — the complete DART serving state as ONE pytree.
+
+Consolidates what used to live in three places (`DartParams` on the
+server object, the raw `core.adaptive.init_state` dict, and ad-hoc
+`ServerStats` counters) into a single registered pytree so the full
+serving state can be jitted over, checkpointed through
+``repro.checkpoint`` (flatten → leaf files → unflatten), and sharded as
+one object.
+
+Every field is a leaf (jnp array); scalar knobs like ``beta_diff`` are
+stored as 0-d arrays so the state round-trips through
+``checkpoint.save``/``restore`` without special-casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adaptive as AD
+from repro.core.routing import DartParams
+
+_FIELDS = ("tau", "coef", "beta_diff", "beta_opt", "adaptive",
+           "served", "exit_counts", "total_macs", "since_update")
+
+
+@dataclasses.dataclass
+class EngineState:
+    """Threshold parameters + §II.C sliding-window state + serving counters.
+
+    tau / coef:   (E-1,) Eq. 19 base thresholds and coefficients
+    beta_diff:    () difficulty sensitivity (Eq. 19)
+    beta_opt:     () accuracy/cost trade-off (Eq. 10)
+    adaptive:     the raw ``core.adaptive.init_state`` dict (ring buffers,
+                  per-class coefficients, UCB1 counters)
+    served:       () int32 — total samples served
+    exit_counts:  (E,) int32 — per-exit routed counts
+    total_macs:   () float32 — cumulative MACs actually spent
+    since_update: () int32 — samples since the last periodic update
+    """
+    tau: jnp.ndarray
+    coef: jnp.ndarray
+    beta_diff: jnp.ndarray
+    beta_opt: jnp.ndarray
+    adaptive: dict
+    served: jnp.ndarray
+    exit_counts: jnp.ndarray
+    total_macs: jnp.ndarray
+    since_update: jnp.ndarray
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in _FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(**dict(zip(_FIELDS, children)))
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def create(cls, n_exits: int, acfg: AD.AdaptiveConfig,
+               dart: DartParams | None = None) -> "EngineState":
+        dart = dart or DartParams.default(n_exits)
+        return cls(
+            tau=jnp.asarray(dart.tau, jnp.float32),
+            coef=jnp.asarray(dart.coef, jnp.float32),
+            beta_diff=jnp.asarray(dart.beta_diff, jnp.float32),
+            beta_opt=jnp.asarray(dart.beta_opt, jnp.float32),
+            adaptive=AD.init_state(acfg),
+            served=jnp.zeros((), jnp.int32),
+            exit_counts=jnp.zeros((n_exits,), jnp.int32),
+            total_macs=jnp.zeros((), jnp.float32),
+            since_update=jnp.zeros((), jnp.int32),
+        )
+
+    # -- views ----------------------------------------------------------
+    @property
+    def dart(self) -> DartParams:
+        """The routing-parameter view (what `core.routing` consumes)."""
+        return DartParams(tau=self.tau, coef=self.coef,
+                          beta_diff=float(self.beta_diff),
+                          beta_opt=float(self.beta_opt))
+
+    def with_policy(self, tau=None, coef=None, beta_diff=None,
+                    beta_opt=None) -> "EngineState":
+        """Functional update of the threshold parameters."""
+        rep = {}
+        if tau is not None:
+            rep["tau"] = jnp.asarray(tau, jnp.float32)
+        if coef is not None:
+            rep["coef"] = jnp.asarray(coef, jnp.float32)
+        if beta_diff is not None:
+            rep["beta_diff"] = jnp.asarray(beta_diff, jnp.float32)
+        if beta_opt is not None:
+            rep["beta_opt"] = jnp.asarray(beta_opt, jnp.float32)
+        return dataclasses.replace(self, **rep)
+
+
+jax.tree_util.register_pytree_node(
+    EngineState,
+    lambda s: s.tree_flatten(),
+    EngineState.tree_unflatten)

@@ -1,47 +1,35 @@
-"""DART serving engine — stage-segmented early exit with batch compaction.
+"""DartServer — legacy entry point, now a thin shim over
+:class:`repro.engine.DartEngine`.
 
-This is where early exits buy back *real* compute (DESIGN.md §4.1 mode c).
-The model is split into stages at exit boundaries; after each stage the
-engine:
+The stage-segmented serving loop, bucket compaction, adaptive updates
+and metering all live in ``repro.engine`` (engine.py / compactor.py /
+state.py); this module keeps the original constructor and method
+signatures working so existing callers don't break.
 
-  1. runs the stage and its exit head on the surviving (bucket-padded)
-     batch,
-  2. gates each sample with the Eq. 19 difficulty-adapted threshold
-     (Alg. 1), using the fused exit-gate kernel,
-  3. emits results for exited samples and *compacts* survivors into the
-     next power-of-two bucket (bounded retraces: #stages × #buckets).
+New code should use the engine API directly:
 
-The adaptive manager (§II.C) runs inline: every request batch is recorded
-into the sliding window with confidence-calibrated pseudo-correctness
-(the paper's label-free deployment mode), and coefficients/UCB update
-every ``update_every`` inferences.
-
-Decisions are bit-identical to the masked-mode reference
-(``core.routing.classify_routed``) for stage-wise classifiers — asserted
-in tests/test_server.py.
+    from repro.engine import DartEngine
+    engine = DartEngine.from_config(cfg, params, cum_costs=...)
+    out = engine.infer(x, mode="compacted")
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import adaptive as AD
 from repro.core import difficulty as DIFF
-from repro.core import thresholds as TH
 from repro.core.routing import DartParams
-from repro.models import get_family
+from repro.engine import BatchCompactor, DartEngine
 
 
 def _next_bucket(n: int, buckets) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    return buckets[-1]
+    """Smallest bucket ≥ n.  Raises ``BatchTooLarge`` when ``n`` exceeds
+    the largest bucket (the old behaviour silently clamped, producing a
+    negative pad that corrupted ``infer_batch``; oversized batches are
+    now split by the engine via ``BatchCompactor.chunks``)."""
+    return BatchCompactor(buckets).bucket_for(n)
 
 
 @dataclasses.dataclass
@@ -53,144 +41,52 @@ class ServerStats:
 
 
 class DartServer:
+    """Deprecated: delegate to :class:`repro.engine.DartEngine`."""
+
     def __init__(self, model_cfg, params, dart: DartParams, *,
                  cum_costs, adaptive_cfg: AD.AdaptiveConfig | None = None,
                  dcfg: DIFF.DifficultyConfig = DIFF.DEFAULT,
                  use_kernel: bool = True, buckets=None,
                  adapt: bool = True, update_every: int = 100):
+        self.engine = DartEngine.from_config(
+            model_cfg, params, dart=dart, adaptive_cfg=adaptive_cfg,
+            dcfg=dcfg, cum_costs=cum_costs, buckets=buckets,
+            use_kernel=use_kernel, adapt=adapt, update_every=update_every)
+        if not self.engine.family.staged:
+            raise ValueError("DartServer requires a staged family")
         self.cfg = model_cfg
         self.params = params
-        self.dart = dart
-        self.dcfg = dcfg
-        self.family = get_family(model_cfg)
-        if not self.family.staged:
-            raise ValueError("DartServer requires a staged family")
-        self.n_stages = self.family.num_stages(model_cfg)
-        self.cum_costs = np.asarray(cum_costs, float)
-        self.use_kernel = use_kernel
-        self.buckets = tuple(buckets) if buckets else tuple(
-            2 ** i for i in range(0, 11))
-        self.adapt = adapt
-        self.update_every = update_every
-        self._since_update = 0
-        self.acfg = adaptive_cfg or AD.AdaptiveConfig(
-            n_exits=self.n_stages, n_classes=getattr(model_cfg, "n_classes",
-                                                     10))
-        self.astate = AD.init_state(self.acfg)
-        self.stats = ServerStats(exit_counts=np.zeros(self.n_stages, int))
 
-        cfgc = model_cfg
-        self._stem = jax.jit(lambda p, x: self.family.apply_stem(p, x, cfgc))
-        self._stage = [jax.jit(partial(
-            lambda p, h, s=s: self.family.apply_stage(p, h, s, cfgc)))
-            for s in range(self.n_stages)]
-        self._exit = [jax.jit(partial(
-            lambda p, h, s=s: self.family.apply_exit(p, h, s, cfgc)))
-            for s in range(self.n_stages)]
-        self._alpha = jax.jit(lambda x: DIFF.image_difficulty(x, self.dcfg))
+    # -- legacy surface -------------------------------------------------
+    @property
+    def dart(self) -> DartParams:
+        return self.engine.state.dart
 
-    # ------------------------------------------------------------------
-    def _gate(self, logits, eff_thresh):
-        if self.use_kernel:
-            from repro.kernels.exit_gate import ops as gops
-            conf, ent, pred, fire = gops.exit_gate(
-                logits, jnp.asarray(eff_thresh, jnp.float32))
-            return conf, pred, fire.astype(bool)
-        p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-        conf = jnp.max(p, axis=-1)
-        pred = jnp.argmax(logits, axis=-1)
-        return conf, pred, conf > eff_thresh
+    @property
+    def n_stages(self) -> int:
+        return self.engine.n_exits
 
-    def _coef_for(self, n):
-        c = AD.effective_coef(self.astate, self.acfg) if self.adapt \
-            else jnp.asarray(self.dart.coef)
-        return c
+    @property
+    def acfg(self) -> AD.AdaptiveConfig:
+        return self.engine.acfg
 
-    # ------------------------------------------------------------------
+    @property
+    def astate(self):
+        return self.engine.state.adaptive
+
+    @property
+    def stats(self) -> ServerStats:
+        s = self.engine.state
+        return ServerStats(
+            served=int(s.served),
+            total_macs=float(s.total_macs),
+            total_latency_s=self.engine.total_latency_s,
+            exit_counts=np.asarray(s.exit_counts))
+
     def infer_batch(self, images: np.ndarray) -> dict:
-        """Serve one request batch.  Returns per-sample results + metering."""
-        t0 = time.time()
-        b = images.shape[0]
-        images = jnp.asarray(images)
-        alpha = np.asarray(self._alpha(images))
+        """Serve one request batch (compacted mode)."""
+        return self.engine.infer(images, mode="compacted")
 
-        out_pred = np.zeros(b, np.int64)
-        out_conf = np.zeros(b, np.float32)
-        out_exit = np.zeros(b, np.int64)
-
-        coef = np.asarray(self._coef_for(b), np.float32)
-        tau = np.asarray(self.dart.tau, np.float32)
-
-        h = self._stem(self.params, images)
-        active = np.arange(b)
-        h_active = h
-        alpha_active = alpha
-        for s in range(self.n_stages):
-            n = len(active)
-            bucket = _next_bucket(n, self.buckets)
-            pad = bucket - n
-            h_pad = jnp.concatenate(
-                [h_active, jnp.zeros((pad,) + h_active.shape[1:],
-                                     h_active.dtype)]) if pad else h_active
-            h_pad = self._stage[s](self.params, h_pad)
-            logits = self._exit[s](self.params, h_pad)
-            if s < self.n_stages - 1:
-                eff = np.clip(coef[s] * tau[s]
-                              + self.dart.beta_diff * alpha_active, 0.0, 1.0)
-                eff_pad = np.concatenate([eff, np.full(pad, 2.0)]) if pad \
-                    else eff
-                conf, pred, fire = self._gate(logits, eff_pad)
-                fire = np.asarray(fire[:n])
-            else:
-                conf, pred, _ = self._gate(
-                    logits, jnp.zeros(bucket, jnp.float32))
-                fire = np.ones(n, bool)
-            conf = np.asarray(conf[:n])
-            pred = np.asarray(pred[:n])
-
-            done = active[fire]
-            out_pred[done] = pred[fire]
-            out_conf[done] = conf[fire]
-            out_exit[done] = s
-            self.stats.exit_counts[s] += int(fire.sum())
-            keep = ~fire
-            if not keep.any():
-                break
-            survivors = jnp.asarray(np.nonzero(keep)[0])
-            h_active = jnp.take(h_pad[:n], survivors, axis=0)
-            alpha_active = alpha_active[keep]
-            active = active[keep]
-
-        macs = self.cum_costs[out_exit]
-        latency = time.time() - t0
-        self.stats.served += b
-        self.stats.total_macs += float(macs.sum())
-        self.stats.total_latency_s += latency
-
-        if self.adapt:
-            # confidence-calibrated pseudo-correctness (paper §II.C.1)
-            self.astate = AD.record_batch(
-                self.astate, self.acfg, jnp.asarray(out_exit),
-                jnp.asarray(out_pred % self.acfg.n_classes),
-                jnp.asarray(out_conf), jnp.asarray(out_conf),
-                jnp.asarray(macs / self.cum_costs[-1]))
-            self._since_update += b
-            if self._since_update >= self.update_every:
-                self.astate = AD.periodic_update(self.astate, self.acfg,
-                                                 beta_opt=self.dart.beta_opt)
-                self._since_update = 0
-
-        return {"pred": out_pred, "conf": out_conf, "exit_idx": out_exit,
-                "alpha": alpha, "macs": macs, "latency_s": latency}
-
-    # ------------------------------------------------------------------
     def masked_reference(self, images: np.ndarray) -> dict:
         """Masked-mode forward (all exits) for equivalence testing."""
-        from repro.core.routing import classify_routed
-        out = self.family.forward(self.params, jnp.asarray(images), self.cfg)
-        coef = self._coef_for(images.shape[0])
-        dart = DartParams(tau=self.dart.tau, coef=coef,
-                          beta_diff=self.dart.beta_diff,
-                          beta_opt=self.dart.beta_opt)
-        return classify_routed(out["exit_logits"], jnp.asarray(images), dart,
-                               self.dcfg)
+        return self.engine.infer(images, mode="masked")

@@ -1,0 +1,217 @@
+"""DartEngine: masked == compacted routing, EngineState checkpoint
+round-trip, registry lookups, BatchCompactor overflow semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as CK
+from repro.core.policy import CalibrationData
+from repro.core.routing import DartParams
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.engine import (BatchCompactor, BatchTooLarge, DartEngine,
+                          EngineState, get_confidence, get_difficulty,
+                          get_optimizer, route_policy)
+from repro.models.cnn_zoo import AlexNetConfig
+from repro.runtime.trainer import Trainer, TrainConfig
+
+DATA = DatasetConfig(name="synth-cifar", n_train=256, n_eval=128)
+
+
+@pytest.fixture(scope="module")
+def trained_cnn():
+    mc = AlexNetConfig(img_res=32, n_classes=10,
+                       channels=(16, 24, 32, 24, 24), fc_dims=(96, 48))
+    tr = Trainer(mc, TrainConfig(batch_size=32, steps=15, lr=3e-3), DATA)
+    tr.run()
+    return mc, tr.params
+
+
+def _engine(trained_cnn, **kw):
+    mc, params = trained_cnn
+    kw.setdefault("cum_costs", [0.3, 0.7, 1.0])
+    kw.setdefault("adapt", False)
+    return DartEngine.from_config(mc, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# masked vs compacted equivalence (ported from test_server)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tau", [0.0, 0.35, 0.9])
+def test_engine_modes_bit_identical(trained_cnn, tau):
+    eng = _engine(trained_cnn,
+                  dart=DartParams(tau=jnp.full((2,), tau),
+                                  coef=jnp.ones(2), beta_diff=0.3))
+    x, _ = make_batch(DATA, range(48), split="eval")
+    out = eng.infer(x, mode="compacted")
+    ref = eng.infer(x, mode="masked")
+    np.testing.assert_array_equal(out["exit_idx"],
+                                  np.asarray(ref["exit_idx"]))
+    np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+    np.testing.assert_allclose(out["conf"], np.asarray(ref["conf"]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_engine_unknown_mode(trained_cnn):
+    eng = _engine(trained_cnn)
+    x, _ = make_batch(DATA, range(4), split="eval")
+    with pytest.raises(ValueError, match="unknown mode"):
+        eng.infer(x, mode="warp")
+
+
+# ---------------------------------------------------------------------------
+# EngineState: pytree + checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_engine_state_is_one_pytree(trained_cnn):
+    eng = _engine(trained_cnn, adapt=True, update_every=16)
+    x, _ = make_batch(DATA, range(32), split="eval")
+    eng.infer(x, mode="compacted")
+    leaves, treedef = jax.tree.flatten(eng.state)
+    assert all(hasattr(l, "shape") for l in leaves)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, EngineState)
+    assert int(rebuilt.served) == 32
+
+    # jit straight over the state object
+    served = jax.jit(lambda s: s.served + 1)(eng.state)
+    assert int(served) == 33
+
+
+def test_engine_state_checkpoint_roundtrip(tmp_path, trained_cnn):
+    eng = _engine(trained_cnn, adapt=True, update_every=16)
+    x, _ = make_batch(DATA, range(48), split="eval")
+    eng.infer(x, mode="compacted")
+    eng.save_state(str(tmp_path), step=7)
+
+    replica = _engine(trained_cnn, adapt=True, update_every=16)
+    step = replica.restore_state(str(tmp_path))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(eng.state),
+                    jax.tree.leaves(replica.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # identical state => identical decisions
+    a = eng.infer(x[:16], mode="masked")
+    b = replica.infer(x[:16], mode="masked")
+    np.testing.assert_array_equal(np.asarray(a["exit_idx"]),
+                                  np.asarray(b["exit_idx"]))
+
+
+def test_engine_state_restore_via_checkpoint_module(tmp_path, trained_cnn):
+    eng = _engine(trained_cnn)
+    CK.save(str(tmp_path), 3, eng.state)
+    restored, step, _ = CK.restore(str(tmp_path), eng.state)
+    assert step == 3
+    assert isinstance(restored, EngineState)
+    np.testing.assert_array_equal(np.asarray(restored.tau),
+                                  np.asarray(eng.state.tau))
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_registry_unknown_names_raise():
+    with pytest.raises(KeyError, match="unknown confidence"):
+        get_confidence("nope")
+    with pytest.raises(KeyError, match="unknown difficulty"):
+        get_difficulty("nope")
+    with pytest.raises(KeyError, match="unknown optimizer"):
+        get_optimizer("nope")
+
+
+def test_engine_rejects_unknown_strategy(trained_cnn):
+    mc, params = trained_cnn
+    with pytest.raises(KeyError, match="unknown confidence"):
+        DartEngine.from_config(mc, params, confidence="nope")
+    with pytest.raises(KeyError, match="unknown difficulty"):
+        DartEngine.from_config(mc, params, difficulty="nope")
+    with pytest.raises(KeyError, match="unknown optimizer"):
+        DartEngine.from_config(mc, params, optimizer="nope")
+
+
+def _synthetic_calibration(rng, n=256, e=3):
+    conf = np.sort(rng.rand(n, e), axis=1)          # deeper => more confident
+    correct = (rng.rand(n, e) < conf).astype(float)
+    return CalibrationData(conf=conf, correct=correct, alpha=rng.rand(n),
+                           cum_costs=np.array([0.3, 0.7, 1.0]),
+                           labels=rng.randint(0, 10, n),
+                           entropy=1.0 - conf)
+
+
+def test_all_optimizers_return_policy_and_route(rng):
+    data = _synthetic_calibration(rng)
+    for name in ("joint_dp", "independent", "static", "branchynet",
+                 "rl_agent"):
+        pol = get_optimizer(name)(data, beta_opt=0.5)
+        assert pol.tau.shape == (2,)
+        idx = route_policy(pol, data)
+        assert idx.shape == (256,)
+        assert idx.min() >= 0 and idx.max() <= 2
+    # static never exits early
+    pol = get_optimizer("static")(data, beta_opt=0.5)
+    assert np.all(route_policy(pol, data) == 2)
+
+
+def test_calibrate_installs_policy(trained_cnn, rng):
+    eng = _engine(trained_cnn)
+    data = _synthetic_calibration(rng)
+    pol = eng.calibrate(data)
+    np.testing.assert_allclose(np.asarray(eng.state.tau), pol.tau,
+                               rtol=1e-6)
+    assert float(eng.state.beta_diff) == pytest.approx(pol.beta_diff)
+
+
+# ---------------------------------------------------------------------------
+# BatchCompactor: overflow is an error, oversized batches are split
+# ---------------------------------------------------------------------------
+
+def test_compactor_bucket_semantics():
+    c = BatchCompactor((1, 2, 4, 8))
+    assert c.bucket_for(1) == 1
+    assert c.bucket_for(3) == 4
+    assert c.bucket_for(8) == 8
+    with pytest.raises(BatchTooLarge):
+        c.bucket_for(9)
+    assert c.chunks(20) == [(0, 8), (8, 16), (16, 20)]
+    assert c.chunks(8) == [(0, 8)]
+    with pytest.raises(BatchTooLarge):
+        c.pad(np.zeros((9, 2)), 8)
+
+
+def test_split_request_routes_under_one_policy(trained_cnn):
+    """A chunked oversized request must defer the §II.C periodic update
+    past its last chunk: every sample is gated under the same
+    coefficients, so compacted still matches the masked reference."""
+    mc, params = trained_cnn
+    eng = DartEngine.from_config(
+        mc, params, cum_costs=[0.3, 0.7, 1.0], buckets=(1, 2, 4, 8, 16),
+        adapt=True, update_every=16,
+        dart=DartParams(tau=jnp.full((2,), 0.35), coef=jnp.ones(2),
+                        beta_diff=0.3))
+    x, _ = make_batch(DATA, range(40), split="eval")    # 3 chunks
+    ref = eng.infer(x, mode="masked")                   # pre-serving state
+    out = eng.infer(x, mode="compacted")
+    np.testing.assert_array_equal(out["exit_idx"],
+                                  np.asarray(ref["exit_idx"]))
+    np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+    # the deferred update did run once the request completed
+    assert int(eng.state.adaptive["t"]) == 1
+    assert int(eng.state.since_update) == 0
+
+
+def test_engine_splits_oversized_batches(trained_cnn):
+    eng = _engine(trained_cnn, buckets=(1, 2, 4, 8, 16),
+                  dart=DartParams(tau=jnp.full((2,), 0.35),
+                                  coef=jnp.ones(2), beta_diff=0.3))
+    x, _ = make_batch(DATA, range(40), split="eval")     # 40 > 16
+    out = eng.infer(x, mode="compacted")
+    ref = eng.infer(x, mode="masked")
+    assert len(out["pred"]) == 40
+    np.testing.assert_array_equal(out["exit_idx"],
+                                  np.asarray(ref["exit_idx"]))
+    np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+    assert int(eng.state.served) == 40
+    assert int(np.asarray(eng.state.exit_counts).sum()) == 40

@@ -29,7 +29,28 @@ def trained_cnn():
 def test_bucket_rounding():
     assert _next_bucket(1, (1, 2, 4, 8)) == 1
     assert _next_bucket(3, (1, 2, 4, 8)) == 4
-    assert _next_bucket(9, (1, 2, 4, 8)) == 8   # clamps at max
+    # n > max bucket used to clamp (negative pad silently corrupted
+    # infer_batch); it must now raise — oversized batches are split.
+    with pytest.raises(ValueError):
+        _next_bucket(9, (1, 2, 4, 8))
+
+
+def test_oversized_batch_is_split_not_corrupted(trained_cnn):
+    """Batches larger than the biggest bucket are served in chunks and
+    still match the masked reference exactly."""
+    mc, params = trained_cnn
+    dart = DartParams(tau=jnp.full((2,), 0.35), coef=jnp.ones(2),
+                      beta_diff=0.3)
+    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
+                     adapt=False, buckets=(1, 2, 4, 8, 16))
+    x, _ = make_batch(DATA, range(40), split="eval")    # 40 > 16
+    out = srv.infer_batch(x)
+    ref = srv.masked_reference(x)
+    assert len(out["pred"]) == 40
+    np.testing.assert_array_equal(out["exit_idx"],
+                                  np.asarray(ref["exit_idx"]))
+    np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+    assert srv.stats.served == 40
 
 
 @pytest.mark.parametrize("tau", [0.0, 0.35, 0.9])
