@@ -1,15 +1,16 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke engine-test bench deps
+.PHONY: test smoke engine-test bench bench-serving docs-check deps
 
-# Tier-1 verify (ROADMAP): the full test suite, fail-fast.
-test:
+# Tier-1 verify (ROADMAP): docs lint + the full test suite, fail-fast.
+test: docs-check
 	$(PY) -m pytest -x -q
 
 # Engine-focused subset (fast iteration on the serving path).
 engine-test:
-	$(PY) -m pytest -q tests/test_engine.py tests/test_server.py
+	$(PY) -m pytest -q tests/test_engine.py tests/test_server.py \
+	    tests/test_sharded_engine.py
 
 # End-to-end smoke: quickstart with tiny settings (~1 min on CPU).
 smoke:
@@ -18,6 +19,14 @@ smoke:
 # Paper-protocol benchmarks (quick budget).
 bench:
 	$(PY) -m benchmarks.run
+
+# Sharded request-stream serving benchmark (8 fake CPU devices).
+bench-serving:
+	$(PY) -m benchmarks.serving_sharded
+
+# Lint docs/ + README: compile python snippets, validate intra-repo links.
+docs-check:
+	$(PY) tools/docs_check.py
 
 deps:
 	pip install -r requirements-test.txt

@@ -119,10 +119,34 @@ def iterate_cell(arch, shape, variants, multi_pod=False):
     return results
 
 
+def serving_cell():
+    """§Perf serving cell: the measured (not dry-run) request-stream
+    benchmark of the sharded engine.  Runs in a subprocess so its
+    fake-device count doesn't collide with this process's 512."""
+    import subprocess
+    import sys
+    print("\n===== §Perf cell: sharded serving (measured) =====")
+    print("    hypothesis: eager serving syncs the host per request "
+          "(np outputs + eager routing/telemetry dispatch); one donated-"
+          "state compiled step per consolidated request group removes "
+          "the round-trips and pipelines, so requests/s should scale "
+          ">=2x even with core-shared fake devices")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_sharded"],
+        env={**os.environ, "XLA_FLAGS":
+             "--xla_force_host_platform_device_count=8"})
+    return r.returncode
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", type=int, default=None)
+    ap.add_argument("--serving", action="store_true",
+                    help="run the measured sharded-serving benchmark "
+                         "instead of the dry-run cells")
     args = ap.parse_args()
+    if args.serving:
+        raise SystemExit(serving_cell())
     plan = PLAN if args.cell is None else [PLAN[args.cell]]
     for arch, shape, variants in plan:
         iterate_cell(arch, shape, variants)

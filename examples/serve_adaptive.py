@@ -77,6 +77,28 @@ def main():
     print(f"served {stats['served']} requests, "
           f"mean normalized MACs {stats['mean_macs']:.3f} (static = 1.0)")
 
+    # ------------------------------------------------------------------
+    # Sharded serving: the same engine API, jit-end-to-end over a mesh.
+    # Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 to see
+    # real data parallelism; docs/serving.md explains the paths.
+    # ------------------------------------------------------------------
+    from repro.launch.mesh import make_serving_mesh
+
+    sharded = DartEngine.from_config(
+        cfg, tr.params, mesh=make_serving_mesh(),
+        dart=engine.dart_params(coef=np.asarray(engine.state.coef)),
+        adaptive_cfg=acfg, adapt=True, update_every=64,
+        cum_costs=engine.cum_costs)
+    for step in range(8):
+        x, _ = stream(1, step)
+        out = sharded.infer(x, mode="masked")      # ONE compiled step
+    sstats = sharded.stats()
+    print(f"\nsharded engine: {sstats['replicas']} replica(s), "
+          f"served {sstats['served']} "
+          f"(per replica {sstats['served_per_replica'].tolist()}), "
+          f"one compiled step/request "
+          f"(traces: {sorted(sharded.trace_counts)})")
+
 
 if __name__ == "__main__":
     main()

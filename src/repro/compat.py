@@ -1,0 +1,38 @@
+"""jax version-compatibility shims, collected in one place.
+
+This repo supports jax 0.4.37 (the pinned container) through current
+releases; every API drift we paper over lives here (or, for
+`jax.sharding.AxisType`, in ``launch/mesh.py`` next to its only use)
+so the gates are findable and removable together.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                     # jax >= 0.5 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                      # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# The "verify replication of outputs" flag was renamed
+# check_rep -> check_vma.
+_SM_FLAG = ("check_vma"
+            if "check_vma" in inspect.signature(_shard_map).parameters
+            else "check_rep")
+
+
+def shard_map(*args, **kwargs):
+    """`jax.shard_map` accepting the new-style ``check_vma`` kwarg on
+    every supported jax (value preserved, keyword renamed as needed)."""
+    if "check_vma" in kwargs:
+        kwargs[_SM_FLAG] = kwargs.pop("check_vma")
+    return _shard_map(*args, **kwargs)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict — older jaxlibs return a
+    one-element list of dicts, newer ones the dict itself."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)

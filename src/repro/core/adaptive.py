@@ -64,11 +64,17 @@ def init_state(cfg: AdaptiveConfig):
 
 
 def record_batch(state, cfg: AdaptiveConfig, exit_idx, pseudo_class, conf,
-                 correct, cost):
+                 correct, cost, valid=None):
     """Append a batch of inference records into the ring buffer.
     All args: (B,) arrays.  ``correct`` may be pseudo-correctness (agreement
     with the final head or high-confidence self-agreement) when no labels
-    exist during deployment."""
+    exist during deployment.
+
+    ``valid``: optional (B,) 0/1 mask for lanes that are bucket padding
+    rather than real samples (the jitted sharded serving path records a
+    fixed-shape batch).  Padded lanes still occupy window slots — their
+    ``buf_valid`` entry is 0, so every statistic ignores them — which
+    keeps the write pattern shape-static under jit."""
     b = exit_idx.shape[0]
     w = cfg.window
     idx = (state["ptr"] + jnp.arange(b)) % w
@@ -80,9 +86,15 @@ def record_batch(state, cfg: AdaptiveConfig, exit_idx, pseudo_class, conf,
     s["buf_correct"] = state["buf_correct"].at[idx].set(
         correct.astype(jnp.float32))
     s["buf_cost"] = state["buf_cost"].at[idx].set(cost.astype(jnp.float32))
-    s["buf_valid"] = state["buf_valid"].at[idx].set(1.0)
+    if valid is None:
+        s["buf_valid"] = state["buf_valid"].at[idx].set(1.0)
+        n_real = b
+    else:
+        validf = jnp.asarray(valid, jnp.float32)
+        s["buf_valid"] = state["buf_valid"].at[idx].set(validf)
+        n_real = jnp.sum(validf).astype(jnp.int32)
     s["ptr"] = (state["ptr"] + b) % w
-    s["seen"] = state["seen"] + b
+    s["seen"] = state["seen"] + n_real
     return s
 
 

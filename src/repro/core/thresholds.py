@@ -34,6 +34,15 @@ def adapt_thresholds(tau, coef, alpha, beta_diff):
     return jnp.clip(eff, 0.0, 1.0)
 
 
+def stage_threshold(tau_s, coef_s, alpha, beta_diff, lo=0.0, hi=1.0):
+    """Eq. 19 for ONE gate: τ'_s = clip(c_s·τ_s + β_diff·α, lo, hi).
+
+    The per-stage form used by the segmented serving engines (classifier
+    compacted mode, sharded compacted mode, LM decode); `adapt_thresholds`
+    is the all-gates batched form."""
+    return jnp.clip(coef_s * tau_s + beta_diff * alpha, lo, hi)
+
+
 def select_exit(conf_stack, eff_thresholds):
     """Algorithm 1 lines 4–12, batched.
 

@@ -26,6 +26,10 @@ Pieces:
   staged classifier path and the LM decode engine (compactor.py)
 * :class:`LMDecodeEngine` — early-exit autoregressive decoding with
   CALM-style KV propagation (lm.py)
+* :class:`ShardedDartEngine` — jit-end-to-end, data-parallel serving
+  over a device mesh: donated-state compiled step, per-bucket compile
+  caches, replicated policy + per-replica telemetry (sharded.py); reach
+  it via ``DartEngine.from_config(..., mesh=make_serving_mesh())``
 
 Legacy entry points (``repro.runtime.server.DartServer``,
 ``repro.runtime.lm_server.LMDecodeServer``) remain importable as thin
@@ -39,4 +43,5 @@ from repro.engine.registry import (get_confidence, get_difficulty,
                                    get_optimizer, register_confidence,
                                    register_difficulty, register_optimizer,
                                    route_policy)
+from repro.engine.sharded import ShardedDartEngine
 from repro.engine.state import EngineState

@@ -52,6 +52,14 @@ class BatchCompactor:
                 return b
         raise BatchTooLarge(f"no bucket for n={n} in {self.buckets}")
 
+    def padded_size(self, n: int, multiple_of: int = 1) -> int:
+        """Fixed serving shape for an ``n``-sample batch: the bucket for
+        ``n``, rounded up to a multiple of ``multiple_of`` (so a
+        data-parallel mesh divides it evenly).  This is the compile-cache
+        key of the sharded engine's jitted step functions."""
+        b = self.bucket_for(n)
+        return -(-b // multiple_of) * multiple_of
+
     def chunks(self, n: int) -> list[tuple[int, int]]:
         """[(start, end)) spans covering an n-sample request, each span
         no larger than the biggest bucket."""

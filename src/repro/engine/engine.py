@@ -39,6 +39,7 @@ import numpy as np
 from repro.core import adaptive as AD
 from repro.core import difficulty as DIFF
 from repro.core import routing as R
+from repro.core import thresholds as TH
 from repro.core.policy import CalibrationData, PolicyResult
 from repro.core.routing import DartParams
 from repro.engine import registry as REG
@@ -113,11 +114,17 @@ class DartEngine:
     def from_config(cls, model_cfg, params, *, dart: DartParams | None = None,
                     adaptive_cfg: AD.AdaptiveConfig | None = None,
                     n_classes: int | None = None,
-                    beta_opt: float | None = None, **kw) -> "DartEngine":
+                    beta_opt: float | None = None,
+                    mesh=None, **kw) -> "DartEngine":
         """Build an engine from a model config + trained params.
 
         ``model_cfg`` may be a config object or an arch id resolved via
-        ``configs.registry`` (e.g. ``"vit-s16"``)."""
+        ``configs.registry`` (e.g. ``"vit-s16"``).
+
+        ``mesh``: a 1-D ("data",) device mesh (``launch.mesh.
+        make_serving_mesh``) — serving then goes through the
+        jit-end-to-end data-parallel :class:`~repro.engine.sharded.
+        ShardedDartEngine` instead of the eager engine."""
         if isinstance(model_cfg, str):
             from repro.configs import registry as cfg_registry
             model_cfg = cfg_registry.get(model_cfg)
@@ -129,6 +136,11 @@ class DartEngine:
         state = EngineState.create(e, acfg, dart)
         if beta_opt is not None:
             state = state.with_policy(beta_opt=beta_opt)
+        if mesh is not None:
+            from repro.engine.sharded import ShardedDartEngine
+            if cls is DartEngine:
+                cls = ShardedDartEngine
+            kw["mesh"] = mesh
         return cls(model_cfg, params, state=state, acfg=acfg, **kw)
 
     # ------------------------------------------------------------------
@@ -311,8 +323,8 @@ class DartEngine:
             h_pad = self._stage[s](self.params, h_pad)
             logits = self._exit[s](self.params, h_pad)
             if s < self.n_exits - 1:
-                eff = np.clip(coef[s] * tau[s] + beta_diff * alpha_active,
-                              0.0, 1.0)
+                eff = np.asarray(TH.stage_threshold(
+                    tau[s], coef[s], alpha_active, beta_diff))
                 # padded lanes get an unreachable threshold -> never fire
                 eff_pad = self.compactor.pad(
                     np.asarray(eff, np.float32), bucket, fill=2.0)
@@ -430,9 +442,8 @@ class DartEngine:
         cum, total = [], 0.0
 
         def flops_of(fn, *args):
-            c = jax.jit(fn).lower(*args).compile().cost_analysis() or {}
-            if isinstance(c, (list, tuple)):            # older jaxlibs
-                c = c[0] if c else {}
+            from repro.compat import cost_analysis_dict
+            c = cost_analysis_dict(jax.jit(fn).lower(*args).compile())
             return float(c.get("flops", 0.0))
 
         for s in range(self.n_exits):

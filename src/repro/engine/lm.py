@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import difficulty as DIFF
+from repro.core import thresholds as TH
 from repro.core.routing import DartParams
 from repro.engine import registry as REG
 from repro.engine.compactor import BatchCompactor
@@ -147,8 +148,8 @@ class LMDecodeEngine:
             conf, pred = np.asarray(conf), np.asarray(pred)
 
             if s < n_stages - 1:
-                eff = np.clip(coef[s] * tau[s]
-                              + self.dart.beta_diff * alpha[active], 0, 1)
+                eff = np.asarray(TH.stage_threshold(
+                    tau[s], coef[s], alpha[active], self.dart.beta_diff))
                 fire = conf > eff
             else:
                 fire = np.ones(n, bool)

@@ -1,0 +1,424 @@
+"""ShardedDartEngine — jit-compiled, data-parallel DART serving.
+
+The eager :class:`~repro.engine.engine.DartEngine` dispatches the model,
+the difficulty estimator and Alg. 1 routing as separate ops from Python;
+this engine lowers the WHOLE serving step — forward, confidence
+functional, difficulty estimation, Eq. 19 threshold adaptation, Alg. 1
+exit selection and the §II.C telemetry fold — into one donated-state
+jitted program replicated over a 1-D device mesh:
+
+    mesh = make_serving_mesh()                  # ("data",) over devices
+    engine = DartEngine.from_config(cfg, params, mesh=mesh)
+    out = engine.infer(x, mode="masked")        # one compiled dispatch
+
+Design (ISSUE 2 tentpole):
+
+* **One compiled program per bucket.**  Request batches are padded to
+  the `BatchCompactor` bucket (rounded up to a replica multiple) so the
+  number of traced programs is bounded by #buckets (masked) or
+  #stages × #buckets (compacted).  `trace_counts` records every trace,
+  so tests can assert one trace per bucket.
+* **Donated state.**  The step takes and returns the full
+  :class:`EngineState`; the argument is donated, so serving is
+  allocation-stable on accelerators (CPU ignores donation).
+* **Sharded telemetry, replicated policy.**  Policy leaves (tau / coef /
+  beta_* and the §II.C coefficient + UCB state) carry
+  ``NamedSharding(mesh, P())``; telemetry leaves (counters and the ring
+  buffers) gain a leading replica axis sharded over ``data`` (see
+  ``state.shard_telemetry``).  Each replica folds in only its local
+  batch shard — zero cross-replica traffic on the hot path — and
+  ``update()`` / ``stats()`` reduce across replicas (merged §II.C
+  window, summed counters).
+* **The eager path stays the oracle.**  ``infer(x, mode="eager")`` runs
+  the parent's eager masked pass (never records), and the equivalence
+  suite asserts compiled == eager for preds, exit indices and telemetry
+  after the all-reduce.
+
+The compiled paths never use the Pallas exit-gate kernel: ``pallas_call``
+does not partition under GSPMD on the host platform, and the jnp gate is
+fused into the step anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import adaptive as AD
+from repro.core import thresholds as TH
+from repro.engine import state as ST
+from repro.engine.engine import DartEngine
+from repro.engine.state import EngineState
+
+def _silence_donation_warning():
+    """CPU backends ignore donation and warn per step; donation still
+    pays off on TPU/GPU, so keep declaring it and silence the noise —
+    but only once someone actually constructs a sharded engine (a plain
+    `import repro.engine` must not mutate global warning filters)."""
+    warnings.filterwarnings(
+        "ignore", message="Some donated buffers were not usable")
+
+
+class ShardedDartEngine(DartEngine):
+    """Data-parallel DART serving over a 1-D ("data",) mesh.
+
+    Construct via ``DartEngine.from_config(cfg, params, mesh=mesh)`` (or
+    directly).  ``infer`` modes:
+
+    * ``masked``    — ONE jitted program: full forward + Alg. 1 + telemetry
+      fold, batch sharded over the mesh.  The serving hot path.
+    * ``compacted`` — stage-segmented: one fused (stage+exit+gate) program
+      per (stage, bucket), survivors compacted between stages, telemetry
+      folded by a compiled step.  Same decisions, real FLOP savings.
+    * ``eager``     — the parent's eager masked pass (reference oracle;
+      never records).
+    """
+
+    def __init__(self, model_cfg, params, *, mesh, state: EngineState,
+                 acfg, data_axis: str = "data", **kw):
+        kw["use_kernel"] = False            # pallas doesn't partition
+        super().__init__(model_cfg, params, state=state, acfg=acfg, **kw)
+        _silence_donation_warning()
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.n_replicas = int(mesh.shape[data_axis])
+        self._repl = NamedSharding(mesh, P())
+        self._row = NamedSharding(mesh, P(data_axis))
+        self._state_sh = self._state_shardings()
+        self.params = jax.device_put(self.params, self._repl)
+        # The compiled step DONATES the state, and device_put zero-copies
+        # already-placed shards — so take ownership with a deep copy, or
+        # donation would invalidate buffers the caller still holds (the
+        # DartParams it passed in, a sibling engine built from the same
+        # DartParams).
+        owned = jax.tree.map(lambda a: jnp.array(a, copy=True),
+                             ST.shard_telemetry(self.state, self.n_replicas))
+        self.state = jax.device_put(owned, self._state_sh)
+        self._steps: dict = {}        # cache key -> compiled callable
+        self.trace_counts: dict = {}  # cache key -> number of traces
+        # Host mirror of sum(state.since_update): checking the periodic-
+        # update schedule must not force a device sync per request, or
+        # back-to-back compiled steps could never pipeline.
+        self._pending = 0
+
+    # ------------------------------------------------------------------
+    # sharding layout
+    # ------------------------------------------------------------------
+    def _state_shardings(self) -> EngineState:
+        """EngineState-of-NamedShardings: policy replicated, telemetry
+        row-sharded on its leading replica axis."""
+        bufs, shared = ST.split_adaptive(self.state.adaptive)
+        return EngineState(
+            tau=self._repl, coef=self._repl, beta_diff=self._repl,
+            beta_opt=self._repl,
+            adaptive={**{k: self._repl for k in shared},
+                      **{k: self._row for k in bufs}},
+            served=self._row, exit_counts=self._row,
+            total_macs=self._row, since_update=self._row)
+
+    def _commit(self):
+        """Re-pin the state to its sharding layout after any eager
+        mutation (calibrate / update / restore)."""
+        self.state = jax.device_put(self.state, self._state_sh)
+
+    def _count_trace(self, key):
+        # Runs in the Python body of a step function, i.e. once per trace.
+        self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+
+    # ------------------------------------------------------------------
+    # traced pieces
+    # ------------------------------------------------------------------
+    def _coef_traced(self, state: EngineState):
+        if self.adapt:
+            # effective_coef touches only the shared (replicated) keys.
+            return AD.effective_coef(state.adaptive, self.acfg)
+        return state.coef
+
+    def _fold_traced(self, state: EngineState, exit_idx, pred, conf, macs,
+                     valid) -> EngineState:
+        """Per-replica telemetry fold: each replica's segment of the
+        (padded) batch lands in its own counters / ring buffer."""
+        r, e = self.n_replicas, self.n_exits
+        per = exit_idx.shape[0] // r
+        validf = valid.astype(jnp.float32)
+        oh = jax.nn.one_hot(exit_idx, e) * validf[:, None]
+        n_new = validf.reshape(r, per).sum(1).astype(jnp.int32)
+        exit_counts = state.exit_counts \
+            + oh.reshape(r, per, e).sum(1).astype(jnp.int32)
+        total_macs = state.total_macs \
+            + (macs * validf).reshape(r, per).sum(1)
+        adaptive = state.adaptive
+        if self.adapt:
+            bufs, shared = ST.split_adaptive(adaptive)
+            cost = macs / float(self.cum_costs[-1])
+            rec = jax.vmap(
+                lambda b, ei, pc, cf, cs, v: AD.record_batch(
+                    b, self.acfg, ei, pc, cf, cf, cs, valid=v))
+            new_bufs = rec(
+                bufs, exit_idx.reshape(r, per),
+                (pred % self.acfg.n_classes).reshape(r, per),
+                conf.reshape(r, per), cost.reshape(r, per),
+                validf.reshape(r, per))
+            adaptive = {**shared, **new_bufs}
+        return dataclasses.replace(
+            state, adaptive=adaptive, served=state.served + n_new,
+            exit_counts=exit_counts, total_macs=total_macs,
+            since_update=state.since_update + n_new)
+
+    # ------------------------------------------------------------------
+    # compiled step factories (cached per bucket)
+    # ------------------------------------------------------------------
+    def _masked_step(self, bp: int, record: bool):
+        """Full DART serving step for a (bp,)-padded batch."""
+        key = ("masked", bp, record)
+        if key in self._steps:
+            return self._steps[key]
+        cum = jnp.asarray(self.cum_costs, jnp.float32)
+
+        def step(params, state, x, valid):
+            self._count_trace(key)
+            logits = self._forward_traced(params, x)     # (E, bp, C)
+            conf_stack = self._conf_fn(logits)
+            alpha = self._diff_fn(x, self.dcfg)
+            eff = TH.adapt_thresholds(state.tau, self._coef_traced(state),
+                                      alpha, state.beta_diff)
+            exit_idx, conf = TH.select_exit(conf_stack, eff)
+            preds_all = jnp.argmax(logits, axis=-1)
+            pred = jnp.take_along_axis(preds_all, exit_idx[None],
+                                       axis=0)[0]
+            macs = cum[exit_idx]
+            if record:
+                state = self._fold_traced(state, exit_idx, pred, conf,
+                                          macs, valid)
+            return state, {"exit_idx": exit_idx, "conf": conf,
+                           "pred": pred, "alpha": alpha, "macs": macs}
+
+        self._steps[key] = jax.jit(
+            step, donate_argnums=(1,),
+            out_shardings=(self._state_sh, self._row))
+        return self._steps[key]
+
+    def _forward_traced(self, params, x):
+        return self.family.forward(params, x, self.cfg)["exit_logits"]
+
+    def _stage_step(self, s: int, bp: int):
+        """Fused stage + exit head + gate for bucket ``bp``."""
+        key = ("stage", s, bp)
+        if key in self._steps:
+            return self._steps[key]
+
+        def step(params, h, eff):
+            self._count_trace(key)
+            h2 = self.family.apply_stage(params, h, s, self.cfg)
+            logits = self.family.apply_exit(params, h2, s, self.cfg)
+            conf = self._conf_fn(logits)
+            pred = jnp.argmax(logits, axis=-1)
+            return h2, conf, pred, conf > eff
+
+        self._steps[key] = jax.jit(step, out_shardings=self._row)
+        return self._steps[key]
+
+    def _fold_step(self, bp: int):
+        """Compiled telemetry fold for the compacted path."""
+        key = ("fold", bp)
+        if key in self._steps:
+            return self._steps[key]
+
+        def step(state, exit_idx, pred, conf, macs, valid):
+            self._count_trace(key)
+            return self._fold_traced(state, exit_idx, pred, conf, macs,
+                                     valid)
+
+        self._steps[key] = jax.jit(step, donate_argnums=(0,),
+                                   out_shardings=self._state_sh)
+        return self._steps[key]
+
+    # ------------------------------------------------------------------
+    # inference
+    # ------------------------------------------------------------------
+    def infer(self, x, mode: str = "masked", record: bool | None = None
+              ) -> dict:
+        """Serve one request batch through the compiled path.
+
+        mode="masked"    — one jitted step (serving hot path).
+        mode="compacted" — compiled stage-segmented path (FLOP savings).
+        mode="eager"     — the parent's eager masked pass (oracle;
+                           never records).
+        record — fold serving counters + the §II.C window into the
+                 sharded state (default ON for the compiled modes —
+                 they ARE the serving path — and OFF for the oracle)."""
+        if mode == "eager":
+            return super()._infer_masked(np.asarray(x), record=False)
+        if mode not in ("masked", "compacted"):
+            raise ValueError(
+                f"unknown mode {mode!r}; known: masked, compacted, eager")
+        record = True if record is None else record
+        x = np.asarray(x)
+        b = x.shape[0]
+        if b > self.compactor.max_bucket:
+            parts = [self._infer_chunk(x[a:z], mode, record)
+                     for a, z in self.compactor.chunks(b)]
+            out = {k: np.concatenate([p[k] for p in parts])
+                   for k in ("pred", "conf", "exit_idx", "alpha", "macs")}
+            out["latency_s"] = sum(p["latency_s"] for p in parts)
+        else:
+            out = self._infer_chunk(x, mode, record)
+        if record:
+            self._maybe_update()
+        return out
+
+    def _pad_batch(self, x, bp):
+        pad = self.compactor.pad(x.astype(np.float32, copy=False), bp)
+        valid = np.zeros(bp, np.float32)
+        valid[:x.shape[0]] = 1.0
+        return (jax.device_put(jnp.asarray(pad), self._row),
+                jax.device_put(jnp.asarray(valid), self._row))
+
+    def _infer_chunk(self, x, mode, record) -> dict:
+        t0 = time.time()
+        b = x.shape[0]
+        bp = self.compactor.padded_size(b, self.n_replicas)
+        if mode == "masked":
+            xp, valid = self._pad_batch(x, bp)
+            self.state, out = self._masked_step(bp, record)(
+                self.params, self.state, xp, valid)
+            # Outputs stay ON DEVICE (lazy): a serving loop that doesn't
+            # read them immediately pipelines compiled steps back to
+            # back through the donated state chain.  np.asarray() on any
+            # value materializes it.
+            res = {k: v[:b] for k, v in out.items()}
+        else:
+            res = self._compacted_chunk(x, bp, record)
+        if record:
+            self._pending += b
+        res["latency_s"] = time.time() - t0
+        self.total_latency_s += res["latency_s"]
+        return res
+
+    def _compacted_chunk(self, x, bp, record) -> dict:
+        if not self.family.staged:
+            raise ValueError(
+                f"compacted mode needs a staged family; "
+                f"{type(self.cfg).__name__} is not staged — use "
+                f"mode='masked'")
+        b = x.shape[0]
+        xp, valid = self._pad_batch(x, bp)
+        alpha = np.asarray(self._alpha(xp))[:b]
+
+        out_pred = np.zeros(b, np.int64)
+        out_conf = np.zeros(b, np.float32)
+        out_exit = np.zeros(b, np.int64)
+
+        coef = np.asarray(self._coef_traced(self.state), np.float32)
+        tau = np.asarray(self.state.tau, np.float32)
+        beta_diff = float(self.state.beta_diff)
+
+        h_active = self._stem(self.params, xp)[:b]
+        active = np.arange(b)
+        alpha_active = alpha
+        for s in range(self.n_exits):
+            n = len(active)
+            sp = self.compactor.padded_size(n, self.n_replicas)
+            if s < self.n_exits - 1:
+                eff = np.asarray(TH.stage_threshold(
+                    tau[s], coef[s], alpha_active, beta_diff))
+                # padded lanes get an unreachable threshold -> never fire
+                eff_pad = self.compactor.pad(
+                    eff.astype(np.float32), sp, fill=2.0)
+            else:
+                # final gate always accepts (Alg. 1 line 12)
+                eff_pad = np.full(sp, -1.0, np.float32)
+            h_pad = jax.device_put(
+                self.compactor.pad(jnp.asarray(h_active), sp), self._row)
+            eff_pad = jax.device_put(jnp.asarray(eff_pad), self._row)
+            h2, conf, pred, fire = self._stage_step(s, sp)(
+                self.params, h_pad, eff_pad)
+            fire = np.asarray(fire[:n])
+            conf = np.asarray(conf[:n])
+            pred = np.asarray(pred[:n])
+
+            done = active[fire]
+            out_pred[done] = pred[fire]
+            out_conf[done] = conf[fire]
+            out_exit[done] = s
+            keep = ~fire
+            if not keep.any():
+                break
+            h_active = self.compactor.gather(h2[:n], np.nonzero(keep)[0])
+            alpha_active = alpha_active[keep]
+            active = active[keep]
+
+        macs = self.cum_costs[out_exit].astype(np.float32)
+        if record:
+            ei = self.compactor.pad(out_exit.astype(np.int32), bp)
+            pr = self.compactor.pad(out_pred.astype(np.int32), bp)
+            cf = self.compactor.pad(out_conf, bp)
+            mc = self.compactor.pad(macs, bp)
+            self.state = self._fold_step(bp)(
+                self.state, jnp.asarray(ei), jnp.asarray(pr),
+                jnp.asarray(cf), jnp.asarray(mc), valid)
+        return {"pred": out_pred, "conf": out_conf, "exit_idx": out_exit,
+                "alpha": alpha, "macs": macs}
+
+    # ------------------------------------------------------------------
+    # §II.C adaptation + metering (cross-replica reductions)
+    # ------------------------------------------------------------------
+    def _maybe_update(self):
+        # self._pending mirrors sum(state.since_update) host-side so the
+        # schedule check never blocks on the in-flight state.
+        if self.adapt and self._pending >= self.update_every:
+            self.update()
+
+    def update(self) -> None:
+        """One §II.C periodic refinement over the MERGED window: all
+        replicas' ring buffers are reduced into one view, both
+        adaptation laws + UCB1 run once, and the new (shared) policy
+        coefficients are re-replicated."""
+        s = self.state
+        merged = AD.periodic_update(ST.merged_adaptive(s), self.acfg,
+                                    beta_opt=float(s.beta_opt))
+        _, new_shared = ST.split_adaptive(merged)
+        bufs, _ = ST.split_adaptive(s.adaptive)
+        self.state = dataclasses.replace(
+            s, adaptive={**new_shared, **bufs},
+            since_update=jnp.zeros_like(s.since_update))
+        self._pending = 0
+        self._commit()
+
+    def calibrate(self, data, **kw):
+        pol = super().calibrate(data, **kw)
+        self._commit()
+        return pol
+
+    def restore_state(self, path: str, step: int | None = None):
+        step = super().restore_state(path, step)
+        self._pending = int(np.sum(np.asarray(self.state.since_update)))
+        self._commit()
+        return step
+
+    def stats(self) -> dict:
+        """Global serving statistics: counters summed over replicas,
+        §II.C window statistics over the merged window."""
+        tel = {k: np.asarray(v) for k, v in
+               ST.reduce_telemetry(self.state).items()}
+        served = int(tel["served"])
+        counts = tel["exit_counts"]
+        out = {"served": served,
+               "exit_counts": counts,
+               "exit_frac": counts / max(served, 1),
+               "total_macs": float(tel["total_macs"]),
+               "mean_macs": float(tel["total_macs"]) / max(served, 1),
+               "total_latency_s": self.total_latency_s,
+               "active_strategy": AD.STRATEGIES[
+                   int(self.state.adaptive["active_strategy"])],
+               "replicas": self.n_replicas,
+               "served_per_replica": np.asarray(self.state.served)}
+        if served:
+            w = AD.window_stats(ST.merged_adaptive(self.state), self.acfg)
+            out["window"] = {k: np.asarray(v) for k, v in w.items()}
+        return out

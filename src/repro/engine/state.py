@@ -101,3 +101,68 @@ jax.tree_util.register_pytree_node(
     EngineState,
     lambda s: s.tree_flatten(),
     EngineState.tree_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Per-replica (sharded) telemetry layout
+# ---------------------------------------------------------------------------
+# The sharded serving engine (repro.engine.sharded) keeps ONE EngineState
+# whose *policy* leaves (tau/coef/beta_*, §II.C coefficients, UCB arms) are
+# replicated across the mesh while the *telemetry* leaves (counters + the
+# §II.C ring buffers) gain a leading replica dimension sharded over the
+# data axis.  Each replica folds in only its local batch shard; readers
+# reduce over the leading axis (`reduce_telemetry` / `merged_adaptive`).
+
+#: EngineState fields that carry serving telemetry (everything else is
+#: policy and stays replicated).
+TELEMETRY_FIELDS = ("served", "exit_counts", "total_macs", "since_update")
+
+#: Keys of the `adaptive` dict that are per-replica ring-buffer state; the
+#: remaining keys (coefficients, UCB counters, active_strategy, t) are
+#: shared policy updated only by the periodic §II.C refinement.
+ADAPTIVE_BUFFER_KEYS = ("buf_exit", "buf_class", "buf_conf", "buf_correct",
+                        "buf_cost", "buf_valid", "ptr", "seen")
+
+
+def split_adaptive(adaptive: dict) -> tuple[dict, dict]:
+    """(per-replica ring buffers, shared coefficient/bandit state)."""
+    bufs = {k: adaptive[k] for k in ADAPTIVE_BUFFER_KEYS}
+    shared = {k: v for k, v in adaptive.items()
+              if k not in ADAPTIVE_BUFFER_KEYS}
+    return bufs, shared
+
+
+def shard_telemetry(state: EngineState, n_replicas: int) -> EngineState:
+    """Give telemetry leaves a leading (n_replicas,) axis.
+
+    Existing counts land in replica 0 (zeros elsewhere) so totals are
+    preserved under the cross-replica reduction."""
+    def lead(v):
+        v = jnp.asarray(v)
+        return jnp.concatenate(
+            [v[None], jnp.zeros((n_replicas - 1,) + v.shape, v.dtype)])
+    bufs, shared = split_adaptive(state.adaptive)
+    return dataclasses.replace(
+        state,
+        adaptive={**shared, **{k: lead(v) for k, v in bufs.items()}},
+        **{f: lead(getattr(state, f)) for f in TELEMETRY_FIELDS})
+
+
+def reduce_telemetry(state: EngineState) -> dict:
+    """Cross-replica all-reduce of the counter fields -> global totals."""
+    return {f: jnp.sum(getattr(state, f), axis=0) for f in TELEMETRY_FIELDS}
+
+
+def merged_adaptive(state: EngineState) -> dict:
+    """One window view over all replicas: ring buffers (R, w) concatenate
+    to (R*w,) — `buf_valid` already masks unwritten slots — while shared
+    coefficient state passes through.  The result feeds every
+    `core.adaptive` read (window_stats / periodic_update) unchanged."""
+    bufs, shared = split_adaptive(state.adaptive)
+    merged = {k: bufs[k].reshape((-1,) + bufs[k].shape[2:])
+              for k in ADAPTIVE_BUFFER_KEYS if k.startswith("buf_")}
+    # ptr/seen are per-replica write cursors; a merged window has no single
+    # cursor — expose the total seen and a dead ptr.
+    merged["ptr"] = jnp.zeros((), jnp.int32)
+    merged["seen"] = jnp.sum(bufs["seen"]).astype(jnp.int32)
+    return {**shared, **merged}

@@ -25,6 +25,7 @@ import jax
 
 from repro.configs import registry
 from repro.launch.mesh import make_production_mesh
+from repro.compat import cost_analysis_dict
 from repro.launch import steps as steps_mod
 
 COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
@@ -109,7 +110,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     compiled = lowered.compile()
     t2 = time.time()
 
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
     bf16_model = bundle.meta.get("bf16", True) and not reduced
@@ -125,7 +126,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         plow = jax.jit(pb.step, in_shardings=pb.in_shardings).lower(
             *pb.inputs)
         pcomp = plow.compile()
-        pca = pcomp.cost_analysis() or {}
+        pca = cost_analysis_dict(pcomp)
         pcoll = parse_collectives(pcomp.as_text(), bf16_model=bf16_model)
         extra = (bundle.meta["scan_layers_total"]
                  - bundle.meta["scan_body_instances"])

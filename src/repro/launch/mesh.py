@@ -5,17 +5,32 @@ touches jax device state).  Single pod: 16×16 = 256 chips (TPU v5e pod);
 multi-pod: 2×16×16 = 512 chips with a leading "pod" axis whose collectives
 ride the (slower) inter-pod links — gradient compression
 (repro.parallel.compression) targets exactly that axis.
+
+``make_serving_mesh()`` is the 1-D data-parallel mesh the sharded DART
+serving engine (``repro.engine.sharded``) replicates over: one "data"
+axis covering every addressable device.
 """
 from __future__ import annotations
 
 import jax
 
+# jax >= 0.5 takes axis_types=(AxisType.Auto, ...); 0.4.x has neither the
+# enum nor the kwarg (same version-gate pattern as the `shard_map` import
+# in models/moe.py).
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _make_mesh(shape, axes):
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -23,9 +38,16 @@ def make_host_mesh(data: int = 1, model: int = 1):
     reduced-config tests."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(data: int | None = None):
+    """1-D ("data",) mesh for data-parallel serving.  ``data`` defaults to
+    every addressable device (fake CPU devices included)."""
+    n = len(jax.devices())
+    data = n if data is None else data
+    assert data <= n, (data, n)
+    return _make_mesh((data,), ("data",))
 
 
 def dp_size(mesh) -> int:

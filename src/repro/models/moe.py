@@ -34,10 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-try:                                     # jax >= 0.5 exports it at top level
-    from jax import shard_map
-except ImportError:                      # jax 0.4.x
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map
 
 from repro.parallel.sharding import Param
 from repro.models import layers as L

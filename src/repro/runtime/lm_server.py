@@ -7,6 +7,9 @@ propagation + bucketed survivor compaction) lives in
 working.  New code should use::
 
     from repro.engine import LMDecodeEngine
+
+Removal timeline (README "Deprecations"): deprecated since PR 1,
+scheduled for removal in PR 4 — port imports to ``repro.engine``.
 """
 from __future__ import annotations
 

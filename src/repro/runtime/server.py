@@ -11,6 +11,11 @@ New code should use the engine API directly:
     from repro.engine import DartEngine
     engine = DartEngine.from_config(cfg, params, cum_costs=...)
     out = engine.infer(x, mode="compacted")
+
+Removal timeline (README "Deprecations"): deprecated since PR 1,
+scheduled for removal in PR 4 — port callers to ``repro.engine``.
+The sharded serving path (``DartEngine.from_config(..., mesh=...)``)
+is engine-only and has no shim.
 """
 from __future__ import annotations
 

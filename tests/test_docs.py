@@ -1,0 +1,33 @@
+"""Docs lint: python snippets compile, intra-repo links resolve, and
+the pages ISSUE 2 promises actually exist."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_docs_pages_exist():
+    for page in ("architecture.md", "serving.md", "paper_map.md"):
+        assert os.path.exists(os.path.join(ROOT, "docs", page)), page
+
+
+def test_docs_check_passes():
+    r = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tools", "docs_check.py")],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, r.stderr
+    assert "all links OK" in r.stdout
+
+
+def test_docs_check_catches_bad_snippet(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("intro\n```python\ndef broken(:\n```\n"
+                   "and a [dead link](nope/missing.md)\n")
+    r = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tools", "docs_check.py"),
+                        str(bad)],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 1
+    assert "does not compile" in r.stderr
+    assert "broken link" in r.stderr

@@ -12,8 +12,8 @@ SCRIPT = textwrap.dedent("""
     from repro.models.moe import MoEConfig, moe_init, moe_apply
     from repro.parallel.sharding import unzip
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(2, 4)
     cfg = MoEConfig(n_experts=8, top_k=2, d_ff=16, capacity_factor=8.0)
     p, _ = unzip(moe_init(jax.random.key(0), 8, cfg, jnp.float32))
     x = jax.random.normal(jax.random.key(1), (32, 8))

@@ -1,0 +1,260 @@
+"""ShardedDartEngine: compiled (jit-end-to-end) serving must match the
+eager oracle — predictions, exit indices and telemetry after the
+cross-replica reduction — and compile at most once per compactor bucket.
+
+In-process tests run on a 1-device ("data",) mesh (the conftest pins the
+test process to ONE device); the real 8-replica run executes in a
+subprocess with ``--xla_force_host_platform_device_count=8``, mirroring
+test_sharding's multi-device pattern.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.routing import DartParams
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.engine import DartEngine, ShardedDartEngine
+from repro.launch.mesh import make_serving_mesh
+from repro.models.cnn_zoo import AlexNetConfig
+from repro.runtime.trainer import Trainer, TrainConfig
+
+DATA = DatasetConfig(name="synth-cifar", n_train=256, n_eval=128)
+COSTS = [0.3, 0.7, 1.0]
+
+
+@pytest.fixture(scope="module")
+def trained_cnn():
+    mc = AlexNetConfig(img_res=32, n_classes=10,
+                       channels=(16, 24, 32, 24, 24), fc_dims=(96, 48))
+    tr = Trainer(mc, TrainConfig(batch_size=32, steps=15, lr=3e-3), DATA)
+    tr.run()
+    return mc, tr.params
+
+
+def _dart(tau):
+    return DartParams(tau=jnp.full((2,), tau), coef=jnp.ones(2),
+                      beta_diff=0.3)
+
+
+def _sharded(trained_cnn, tau=0.2, **kw):
+    mc, params = trained_cnn
+    kw.setdefault("cum_costs", COSTS)
+    kw.setdefault("adapt", True)
+    kw.setdefault("update_every", 64)
+    return DartEngine.from_config(mc, params, mesh=make_serving_mesh(),
+                                  dart=_dart(tau), **kw)
+
+
+def _eager(trained_cnn, tau=0.2, **kw):
+    mc, params = trained_cnn
+    kw.setdefault("cum_costs", COSTS)
+    kw.setdefault("adapt", True)
+    kw.setdefault("update_every", 64)
+    return DartEngine.from_config(mc, params, dart=_dart(tau), **kw)
+
+
+def test_mesh_kwarg_dispatches_to_sharded(trained_cnn):
+    eng = _sharded(trained_cnn)
+    assert isinstance(eng, ShardedDartEngine)
+    assert eng.n_replicas == 1
+    # policy replicated, telemetry row-sharded on the leading replica axis
+    assert eng.state.tau.sharding.spec == jax.sharding.PartitionSpec()
+    assert eng.state.served.shape == (1,)
+    assert eng.state.adaptive["buf_conf"].shape[0] == 1
+
+
+@pytest.mark.parametrize("tau", [0.0, 0.2, 0.9])
+def test_compiled_matches_eager_oracle(trained_cnn, tau):
+    eng = _sharded(trained_cnn, tau=tau)
+    x, _ = make_batch(DATA, range(48), split="eval")
+    ref = eng.infer(x, mode="eager")
+    out = eng.infer(x, mode="masked")
+    np.testing.assert_array_equal(out["exit_idx"],
+                                  np.asarray(ref["exit_idx"]))
+    np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+    np.testing.assert_allclose(out["conf"], np.asarray(ref["conf"]),
+                               rtol=2e-5, atol=2e-5)
+    com = eng.infer(x, mode="compacted")
+    np.testing.assert_array_equal(com["exit_idx"], out["exit_idx"])
+    np.testing.assert_array_equal(com["pred"], out["pred"])
+
+
+def test_unknown_mode_raises(trained_cnn):
+    eng = _sharded(trained_cnn)
+    x, _ = make_batch(DATA, range(4), split="eval")
+    with pytest.raises(ValueError, match="unknown mode"):
+        eng.infer(x, mode="warp")
+
+
+def test_telemetry_matches_eager_after_reduction(trained_cnn):
+    """served / exit_counts / total_macs / §II.C window stats must agree
+    with an eager engine that served the identical stream."""
+    sh = _sharded(trained_cnn)
+    eg = _eager(trained_cnn)
+    x, _ = make_batch(DATA, range(48), split="eval")
+    sh.infer(x, mode="masked")
+    sh.infer(x[:17], mode="compacted")
+    eg.infer(x, mode="masked", record=True)
+    eg.infer(x[:17], mode="compacted")
+    a, b = sh.stats(), eg.stats()
+    assert a["served"] == b["served"] == 65
+    np.testing.assert_array_equal(a["exit_counts"], b["exit_counts"])
+    np.testing.assert_allclose(a["total_macs"], b["total_macs"], rtol=1e-5)
+    np.testing.assert_allclose(float(a["window"]["acc"]),
+                               float(b["window"]["acc"]), atol=1e-6)
+    np.testing.assert_allclose(float(a["window"]["cost"]),
+                               float(b["window"]["cost"]), atol=1e-6)
+
+
+def test_one_trace_per_bucket(trained_cnn):
+    """Distinct batch sizes inside one bucket must share a compilation;
+    a new bucket triggers exactly one new trace."""
+    eng = _sharded(trained_cnn)
+    x, _ = make_batch(DATA, range(16), split="eval")
+    for n in (3, 4, 3):                         # all land in bucket 4
+        eng.infer(x[:n], mode="masked")
+    assert eng.trace_counts == {("masked", 4, True): 1}
+    for n in (7, 8, 5):                         # bucket 8
+        eng.infer(x[:n], mode="masked")
+    assert eng.trace_counts[("masked", 8, True)] == 1
+    assert eng.trace_counts[("masked", 4, True)] == 1
+    # compacted: one trace per (stage, bucket) + one telemetry fold
+    eng.infer(x[:13], mode="compacted")
+    eng.infer(x[:16], mode="compacted")
+    for key, n in eng.trace_counts.items():
+        assert n == 1, (key, n)
+
+
+def test_oversized_request_chunks_and_defers_update(trained_cnn):
+    eng = _sharded(trained_cnn, buckets=(1, 2, 4, 8, 16), update_every=16)
+    x, _ = make_batch(DATA, range(40), split="eval")    # 3 chunks
+    ref = eng.infer(x, mode="eager")
+    out = eng.infer(x, mode="masked")
+    assert len(out["pred"]) == 40
+    np.testing.assert_array_equal(out["exit_idx"],
+                                  np.asarray(ref["exit_idx"]))
+    np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+    # the deferred §II.C update ran exactly once, after the last chunk
+    assert int(eng.state.adaptive["t"]) == 1
+    assert int(np.sum(np.asarray(eng.state.since_update))) == 0
+    assert eng.stats()["served"] == 40
+
+
+def test_update_reduces_merged_window_and_replicates_policy(trained_cnn):
+    sh = _sharded(trained_cnn, update_every=10 ** 9)
+    eg = _eager(trained_cnn, update_every=10 ** 9)
+    x, _ = make_batch(DATA, range(48), split="eval")
+    sh.infer(x, mode="masked")
+    eg.infer(x, mode="masked", record=True)
+    sh.update()
+    eg.update()
+    np.testing.assert_allclose(
+        np.asarray(sh.state.adaptive["coef_temporal"]),
+        np.asarray(eg.state.adaptive["coef_temporal"]), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(sh.state.adaptive["coef_class"]),
+        np.asarray(eg.state.adaptive["coef_class"]), atol=1e-6)
+    assert int(sh.state.adaptive["t"]) == int(eg.state.adaptive["t"]) == 1
+    # coefficients stay replica-free (shared policy)
+    assert sh.state.adaptive["coef_temporal"].shape == (2,)
+
+
+def test_checkpoint_roundtrip_sharded(tmp_path, trained_cnn):
+    eng = _sharded(trained_cnn)
+    x, _ = make_batch(DATA, range(32), split="eval")
+    eng.infer(x, mode="masked")
+    eng.save_state(str(tmp_path), step=5)
+    replica = _sharded(trained_cnn)
+    assert replica.restore_state(str(tmp_path)) == 5
+    for a, b in zip(jax.tree.leaves(eng.state),
+                    jax.tree.leaves(replica.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert replica.stats()["served"] == 32
+
+
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.routing import DartParams
+    from repro.data.datasets import DatasetConfig, make_batch
+    from repro.engine import DartEngine
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.cnn_zoo import AlexNetConfig
+    from repro.runtime.trainer import Trainer, TrainConfig
+
+    DATA = DatasetConfig(name="synth-cifar", n_train=256, n_eval=128)
+    mc = AlexNetConfig(img_res=32, n_classes=10,
+                       channels=(16, 24, 32, 24, 24), fc_dims=(96, 48))
+    tr = Trainer(mc, TrainConfig(batch_size=32, steps=10, lr=3e-3), DATA)
+    tr.run()
+    mesh = make_serving_mesh()
+    dart = DartParams(tau=jnp.full((2,), 0.2), coef=jnp.ones(2),
+                      beta_diff=0.3)
+    eng = DartEngine.from_config(mc, tr.params, mesh=mesh, dart=dart,
+                                 cum_costs=[0.3, 0.7, 1.0], adapt=True,
+                                 update_every=64)
+    assert eng.n_replicas == 8, eng.n_replicas
+    # telemetry physically sharded over the data axis, policy replicated
+    assert str(eng.state.served.sharding.spec) == "PartitionSpec('data',)"
+    assert str(eng.state.adaptive["buf_conf"].sharding.spec) == \\
+        "PartitionSpec('data',)"
+    assert eng.state.tau.sharding.spec == jax.sharding.PartitionSpec()
+
+    x, _ = make_batch(DATA, range(48), split="eval")
+    ref = eng.infer(x, mode="eager")
+    out = eng.infer(x, mode="masked")
+    np.testing.assert_array_equal(out["exit_idx"],
+                                  np.asarray(ref["exit_idx"]))
+    np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+    np.testing.assert_allclose(out["conf"], np.asarray(ref["conf"]),
+                               rtol=2e-5, atol=2e-5)
+    com = eng.infer(x, mode="compacted")
+    np.testing.assert_array_equal(com["exit_idx"], out["exit_idx"])
+    np.testing.assert_array_equal(com["pred"], out["pred"])
+
+    # telemetry after all-reduce == eager engine on the same stream
+    eager = DartEngine.from_config(mc, tr.params, dart=dart,
+                                   cum_costs=[0.3, 0.7, 1.0], adapt=True,
+                                   update_every=64)
+    eager.infer(x, mode="masked", record=True)
+    eager.infer(x, mode="compacted")
+    a, b = eng.stats(), eager.stats()
+    assert a["served"] == b["served"] == 96, (a["served"], b["served"])
+    np.testing.assert_array_equal(a["exit_counts"], b["exit_counts"])
+    np.testing.assert_allclose(a["total_macs"], b["total_macs"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(a["window"]["acc"]),
+                               float(b["window"]["acc"]), atol=1e-6)
+
+    # one trace per bucket even with 8 replicas
+    for n in (3, 4, 48, 17):
+        eng.infer(x[:n], mode="masked")
+    masked_keys = [k for k in eng.trace_counts if k[0] == "masked"]
+    assert all(eng.trace_counts[k] == 1 for k in masked_keys), \\
+        eng.trace_counts
+    # buckets are padded to multiples of 8 replicas:
+    # n=3,4 -> bucket 4 -> 8; n=17 -> bucket 32; n=48 -> bucket 64
+    assert set(k[1] for k in masked_keys) == {8, 32, 64}, masked_keys
+
+    eng.update()
+    eng.infer(x, mode="masked")
+    print("SHARDED_OK")
+""" % os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_sharded_equivalence_on_8_devices():
+    """Full equivalence + sharding-layout + recompile assertions on an
+    8-fake-device ("data",) mesh (subprocess)."""
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SHARDED_OK" in r.stdout

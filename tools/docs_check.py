@@ -1,0 +1,92 @@
+"""Lint the docs: compile every fenced python snippet and verify every
+intra-repo link resolves.
+
+Checks (run by ``make docs-check``, which ``make test`` depends on):
+
+1. every ```python fenced block in docs/*.md and README.md must be
+   syntactically valid Python (``compile(..., "exec")``);
+2. every relative markdown link/image target must exist on disk
+   (anchors are stripped; external http(s)/mailto links are skipped).
+
+Usage:  python tools/docs_check.py [files...]   (default: README.md docs/)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) and ![alt](target); target up to the first ')' —
+# fine for this repo's docs (no nested parens in link targets).
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def python_blocks(text: str):
+    """Yield (start_line, source) for each ```python fenced block."""
+    lines = text.splitlines()
+    block, start, lang = None, 0, None
+    for i, line in enumerate(lines, 1):
+        m = FENCE_RE.match(line.strip())
+        if m and block is None:
+            block, start, lang = [], i + 1, m.group(1).lower()
+        elif line.strip() == "```" and block is not None:
+            if lang == "python":
+                yield start, "\n".join(block)
+            block, lang = None, None
+        elif block is not None:
+            block.append(line)
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    try:
+        rel = path.relative_to(ROOT)
+    except ValueError:                  # explicit file outside the repo
+        rel = path
+    for line, src in python_blocks(text):
+        try:
+            compile(src, f"{rel}:{line}", "exec")
+        except SyntaxError as e:
+            errors.append(f"{rel}:{line + (e.lineno or 1) - 1}: "
+                          f"snippet does not compile: {e.msg}")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1).split("#", 1)[0]
+        if not target or target.startswith(EXTERNAL):
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            line = text[:m.start()].count("\n") + 1
+            errors.append(f"{rel}:{line}: broken link -> {m.group(1)}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [pathlib.Path(a) for a in argv]
+    else:
+        files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        print(f"docs-check: missing file(s): {missing}", file=sys.stderr)
+        return 1
+    errors = []
+    n_blocks = 0
+    for f in files:
+        n_blocks += sum(1 for _ in python_blocks(f.read_text()))
+        errors += check_file(f)
+    for e in errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"docs-check: {len(files)} file(s), {n_blocks} python "
+          f"snippet(s), all links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
