@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke engine-test bench bench-serving docs-check deps
+.PHONY: test smoke engine-test bench bench-serving bench-async docs-check \
+    deps
 
 # Tier-1 verify (ROADMAP): docs lint + the full test suite, fail-fast.
 test: docs-check
@@ -10,7 +11,7 @@ test: docs-check
 # Engine-focused subset (fast iteration on the serving path).
 engine-test:
 	$(PY) -m pytest -q tests/test_engine.py tests/test_server.py \
-	    tests/test_sharded_engine.py
+	    tests/test_sharded_engine.py tests/test_serving.py
 
 # End-to-end smoke: quickstart with tiny settings (~1 min on CPU).
 smoke:
@@ -23,6 +24,11 @@ bench:
 # Sharded request-stream serving benchmark (8 fake CPU devices).
 bench-serving:
 	$(PY) -m benchmarks.serving_sharded
+
+# Async scheduler benchmark: open-loop Poisson load sweep vs per-request
+# eager dispatch (>= 2x sustained throughput at equal p95).
+bench-async:
+	$(PY) -m benchmarks.serving_async
 
 # Lint docs/ + README: compile python snippets, validate intra-repo links.
 docs-check:

@@ -120,9 +120,9 @@ def iterate_cell(arch, shape, variants, multi_pod=False):
 
 
 def serving_cell():
-    """§Perf serving cell: the measured (not dry-run) request-stream
-    benchmark of the sharded engine.  Runs in a subprocess so its
-    fake-device count doesn't collide with this process's 512."""
+    """§Perf serving cells: the measured (not dry-run) serving
+    benchmarks.  Each runs in a subprocess so its device flags don't
+    collide with this process's 512 fake devices."""
     import subprocess
     import sys
     print("\n===== §Perf cell: sharded serving (measured) =====")
@@ -131,11 +131,20 @@ def serving_cell():
           "state compiled step per consolidated request group removes "
           "the round-trips and pipelines, so requests/s should scale "
           ">=2x even with core-shared fake devices")
-    r = subprocess.run(
+    r1 = subprocess.run(
         [sys.executable, "-m", "benchmarks.serving_sharded"],
         env={**os.environ, "XLA_FLAGS":
              "--xla_force_host_platform_device_count=8"})
-    return r.returncode
+    print("\n===== §Perf cell: async scheduler (measured) =====")
+    print("    hypothesis: per-request dispatch pays the full per-call "
+          "overhead and a tiny batch per request; the repro.serving "
+          "scheduler consolidates a Poisson stream into compiled-bucket "
+          "batches under the deadline budget, so sustained samples/s at "
+          "equal p95 should scale >=2x")
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    r2 = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_async"], env=env)
+    return r1.returncode or r2.returncode
 
 
 def main():

@@ -1,6 +1,8 @@
 """DART on a language model: train a small multi-exit LM, then decode with
 REAL per-token layer skipping + CALM state propagation (DESIGN.md §3),
-through the ``repro.engine`` LM decode engine.
+through the queue-backed session handle over the ``repro.engine`` LM
+decode engine: concurrent callers submit prompts with deadlines and the
+scheduler consolidates them into shared bucketed decode loops.
 
 Run:  PYTHONPATH=src python examples/lm_early_exit.py
 """
@@ -32,8 +34,21 @@ def main():
 
     prompts, _ = make_batch(DATA, range(8), kind="tokens", seq_len=17,
                             vocab=CFG.vocab)
-    gen, stages = srv.generate(prompts[:, :9], n_new=16, max_len=64)
-    print("\ngenerated shapes:", gen.shape)
+    # Queue-backed session: 8 concurrent "callers" each submit one
+    # prompt; the scheduler lanes them by (prompt_len, n_new) and all
+    # eight share ONE bucketed early-exit decode loop.
+    session = srv.session()
+    futs = [session.submit(prompts[i, :9], n_new=16) for i in range(8)]
+    outs = [f.result() for f in futs]
+    session.close()
+    gen = np.concatenate([o["tokens"] for o in outs])
+    stages = np.concatenate([o["stages"] for o in outs])
+    sstats = session.stats()
+    print(f"\nsession: {sstats['scheduler']['submitted']} callers -> "
+          f"{sstats['scheduler']['flush_deadline'] + sstats['scheduler']['flush_size'] + sstats['scheduler']['flush_forced'] + sstats['scheduler']['flush_hold']} "
+          f"consolidated decode call(s); p95 latency "
+          f"{sstats['requests']['latency_ms']['p95']:.0f} ms")
+    print("generated shapes:", gen.shape)
     print("exit-stage histogram over generated tokens:",
           np.bincount(stages.ravel(), minlength=3).tolist(),
           "(stage 0 = after layer 1, 1 = after layer 3, 2 = full depth)")

@@ -114,6 +114,16 @@ def window_stats(state, cfg: AdaptiveConfig):
             "n": n}
 
 
+def window_exit_depth(state, cfg: AdaptiveConfig):
+    """Mean routed exit index over the valid window — the exit-count
+    prior from telemetry: at what depth has traffic ACTUALLY been
+    exiting.  The serving admission planner seeds its cost prediction
+    with this before it has per-difficulty-class observations."""
+    st = window_stats(state, cfg)
+    return jnp.sum(st["exit_frac"] * jnp.arange(cfg.n_exits,
+                                                dtype=jnp.float32))
+
+
 def temporal_update(state, cfg: AdaptiveConfig):
     """Eq. 13: c_t = α_decay·c_{t−1} + (1−α_decay)·f(performance_t).
 

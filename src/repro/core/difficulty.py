@@ -27,6 +27,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 SOBEL_X = jnp.array([[-1.0, 0.0, 1.0],
@@ -168,6 +169,26 @@ def latent_difficulty(latents, signal_frac, cfg: DifficultyConfig = DEFAULT):
     present — high-noise (early) steps are easy, so α→0 there."""
     base = image_difficulty(latents, cfg)
     return jnp.clip(base * signal_frac, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Difficulty classes (admission-time traffic partitioning)
+# ---------------------------------------------------------------------------
+
+def difficulty_class(alpha, edges):
+    """Partition Eq. 8 difficulties into classes: class k ⇔ alpha in
+    (edges[k-1], edges[k]].  The async scheduler lanes requests by this
+    so buckets stay cost-homogeneous.  Host inputs (python scalars /
+    numpy) stay on numpy — the admission hot path must not pay a device
+    round-trip per request — while jax arrays/tracers take the jnp
+    path.  Returns int class indices shaped like ``alpha``."""
+    if isinstance(alpha, jax.Array):        # includes tracers
+        edges_j = jnp.asarray(edges, jnp.float32)
+        return jnp.sum(alpha[..., None] > edges_j,
+                       axis=-1).astype(jnp.int32)
+    a = np.asarray(alpha, np.float32)
+    e = np.asarray(edges, np.float32)
+    return np.sum(a[..., None] > e, axis=-1).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

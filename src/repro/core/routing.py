@@ -7,7 +7,7 @@ Execution modes (DESIGN.md §4.1):
   selection on the stacked exit confidences.  Bitwise-identical decisions
   to the sequential algorithm; compute is worst-case (used by the dry-run).
 * ``serve-compacted``— the stage-segmented engine in
-  ``repro.runtime.server`` (real FLOP savings via batch compaction).
+  ``repro.engine`` (real FLOP savings via batch compaction).
 
 Confidence functionals per family:
 * classifiers — max softmax probability (paper), optionally via the fused

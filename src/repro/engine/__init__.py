@@ -31,9 +31,14 @@ Pieces:
   caches, replicated policy + per-replica telemetry (sharded.py); reach
   it via ``DartEngine.from_config(..., mesh=make_serving_mesh())``
 
+One layer up, :mod:`repro.serving` turns an engine into an async server
+(``AsyncDartServer(engine).submit(x, deadline_ms) -> Future``) with
+difficulty-aware admission and SLO-driven batch consolidation.
+
 Legacy entry points (``repro.runtime.server.DartServer``,
 ``repro.runtime.lm_server.LMDecodeServer``) remain importable as thin
-shims that delegate here.
+shims that delegate here; they emit ``DeprecationWarning`` and are
+removed in PR 4.
 """
 from repro.engine import registry
 from repro.engine.compactor import BatchCompactor, BatchTooLarge

@@ -55,8 +55,11 @@ class BatchCompactor:
     def padded_size(self, n: int, multiple_of: int = 1) -> int:
         """Fixed serving shape for an ``n``-sample batch: the bucket for
         ``n``, rounded up to a multiple of ``multiple_of`` (so a
-        data-parallel mesh divides it evenly).  This is the compile-cache
-        key of the sharded engine's jitted step functions."""
+        data-parallel mesh divides it evenly).  Call it through
+        ``engine.bucket_key(n)`` — the ONE compile-cache key shared by
+        the eager compacted path, the sharded step caches and the async
+        scheduler's flush planner (``multiple_of`` = the engine's
+        ``replica_multiple``)."""
         b = self.bucket_for(n)
         return -(-b // multiple_of) * multiple_of
 

@@ -43,6 +43,7 @@ from repro.core import thresholds as TH
 from repro.core.policy import CalibrationData, PolicyResult
 from repro.core.routing import DartParams
 from repro.engine import registry as REG
+from repro.engine import state as ST
 from repro.engine.compactor import BatchCompactor
 from repro.engine.state import EngineState
 from repro.models import get_family
@@ -85,6 +86,10 @@ class DartEngine:
         self._diff_fn = REG.get_difficulty(difficulty)
         self._opt_fn = REG.get_optimizer(optimizer)
         self.compactor = BatchCompactor(buckets)
+        # Compile-cache key granularity: padded batch shapes are rounded
+        # up to a multiple of this (1 eagerly; the sharded engine sets it
+        # to the replica count so the mesh divides every bucket evenly).
+        self.replica_multiple = 1
         self.use_kernel = use_kernel and confidence == "softmax-max"
         self.adapt = adapt
         self.update_every = update_every
@@ -208,6 +213,14 @@ class DartEngine:
             return AD.effective_coef(self.state.adaptive, self.acfg)
         return self.state.coef
 
+    def bucket_key(self, n: int) -> int:
+        """THE compile-cache key for an ``n``-sample batch: the
+        ``BatchCompactor`` bucket rounded up to ``replica_multiple``.
+        Every serving path (eager compacted, sharded masked/compacted,
+        the async scheduler's flush planner) must key compiled shapes
+        through here so they agree on what shares a compilation."""
+        return self.compactor.padded_size(n, self.replica_multiple)
+
     def _gate(self, logits, eff_thresh):
         if self.use_kernel:
             from repro.kernels.exit_gate import ops as gops
@@ -233,8 +246,8 @@ class DartEngine:
     # ------------------------------------------------------------------
     # inference
     # ------------------------------------------------------------------
-    def infer(self, x, mode: str = "compacted", record: bool | None = None
-              ) -> dict:
+    def infer(self, x, mode: str = "compacted", record: bool | None = None,
+              alpha=None, pad_to: int | None = None) -> dict:
         """Serve one request batch.
 
         mode="masked"    — full forward, Alg. 1 on stacked confidences.
@@ -242,25 +255,47 @@ class DartEngine:
                            decisions, real FLOP savings).
         record — update serving counters + the §II.C sliding window
                  (defaults on for compacted serving, off for masked so a
-                 reference pass never perturbs the engine state)."""
+                 reference pass never perturbs the engine state).
+        alpha  — optional (B,) precomputed Eq. 8 difficulty.  The async
+                 scheduler (repro.serving) estimates difficulty once at
+                 admission and hands it through here, so routing never
+                 re-runs the estimator on the consolidated batch.
+        pad_to — masked mode only: zero-pad the batch to this fixed
+                 shape (normally ``engine.bucket_key(B)``) so arbitrary
+                 request-consolidation sizes reuse one compiled forward
+                 per bucket.  Padding never reaches outputs or telemetry.
+                 The sharded engine ignores it (it pads internally)."""
         if mode == "masked":
-            return self._infer_masked(x, record=bool(record))
+            return self._infer_masked(x, record=bool(record), alpha=alpha,
+                                      pad_to=pad_to)
         if mode == "compacted":
             record = True if record is None else record
-            return self._infer_compacted(x, record=record)
+            return self._infer_compacted(x, record=record, alpha=alpha)
         raise ValueError(f"unknown mode {mode!r}; known: masked, compacted")
 
     # -- masked ---------------------------------------------------------
-    def _infer_masked(self, x, record: bool = False) -> dict:
+    def _infer_masked(self, x, record: bool = False, alpha=None,
+                      pad_to: int | None = None) -> dict:
         t0 = time.time()
         x = jnp.asarray(x)
+        b = x.shape[0]
+        if pad_to is not None and pad_to > b:
+            x = self.compactor.pad(x, pad_to)
+            if alpha is not None:
+                alpha = self.compactor.pad(
+                    np.asarray(alpha, np.float32), pad_to)
         out = self._forward(self.params, x)
-        logits = out["exit_logits"]                         # (E, B, C)
+        logits = out["exit_logits"]                         # (E, bp, C)
         conf_stack = self._conf_fn(logits)
-        alpha = self._alpha(x)
+        alpha = self._alpha(x) if alpha is None else jnp.asarray(alpha)
         r = R.route(conf_stack, alpha, self.dart_params())
         preds_all = jnp.argmax(logits, axis=-1)
         pred = jnp.take_along_axis(preds_all, r["exit_idx"][None], axis=0)[0]
+        if x.shape[0] > b:                  # strip padded lanes
+            r = {k: v[:b] for k, v in r.items()}
+            pred = pred[:b]
+            preds_all = preds_all[:, :b]
+            conf_stack = conf_stack[:, :b]
         macs = self.cum_costs[np.asarray(r["exit_idx"])]
         res = {**r, "pred": pred, "preds_all": preds_all,
                "conf_stack": conf_stack, "macs": macs,
@@ -275,25 +310,27 @@ class DartEngine:
         return res
 
     # -- compacted ------------------------------------------------------
-    def _infer_compacted(self, x, record: bool = True) -> dict:
+    def _infer_compacted(self, x, record: bool = True, alpha=None) -> dict:
         b = x.shape[0]
         if b > self.compactor.max_bucket:
             # One request = one policy: chunks are recorded but the §II.C
             # periodic update is deferred past the last chunk, so every
             # sample of the request is gated under the same coefficients
             # (and compacted stays bit-identical to masked).
-            parts = [self._infer_compacted_chunk(x[a:z], record=record)
-                     for a, z in self.compactor.chunks(b)]
+            parts = [self._infer_compacted_chunk(
+                x[a:z], record=record,
+                alpha=None if alpha is None else alpha[a:z])
+                for a, z in self.compactor.chunks(b)]
             out = {k: np.concatenate([p[k] for p in parts])
                    for k in ("pred", "conf", "exit_idx", "alpha", "macs")}
             out["latency_s"] = sum(p["latency_s"] for p in parts)
         else:
-            out = self._infer_compacted_chunk(x, record=record)
+            out = self._infer_compacted_chunk(x, record=record, alpha=alpha)
         if record:
             self._maybe_update()
         return out
 
-    def _infer_compacted_chunk(self, x, record: bool) -> dict:
+    def _infer_compacted_chunk(self, x, record: bool, alpha=None) -> dict:
         if not self.family.staged:
             raise ValueError(
                 f"compacted mode needs a staged family; "
@@ -302,7 +339,8 @@ class DartEngine:
         t0 = time.time()
         b = x.shape[0]
         x = jnp.asarray(x)
-        alpha = np.asarray(self._alpha(x))
+        alpha = np.asarray(self._alpha(x)) if alpha is None \
+            else np.asarray(alpha, np.float32)
 
         out_pred = np.zeros(b, np.int64)
         out_conf = np.zeros(b, np.float32)
@@ -318,7 +356,7 @@ class DartEngine:
         exit_counts = np.zeros(self.n_exits, np.int32)
         for s in range(self.n_exits):
             n = len(active)
-            bucket = self.compactor.bucket_for(n)
+            bucket = self.bucket_key(n)
             h_pad = self.compactor.pad(h_active, bucket)
             h_pad = self._stage[s](self.params, h_pad)
             logits = self._exit[s](self.params, h_pad)
@@ -396,6 +434,12 @@ class DartEngine:
         self.state = dataclasses.replace(
             s, adaptive=adaptive, since_update=jnp.zeros((), jnp.int32))
 
+    def record_requests(self, latencies_ms, missed=None) -> None:
+        """Fold completed-request latency/deadline telemetry into the
+        engine state (host-side write; the async scheduler calls this
+        once per flushed bucket)."""
+        self.state = ST.record_requests(self.state, latencies_ms, missed)
+
     def stats(self) -> dict:
         """Serving counters + windowed §II.C statistics."""
         s = self.state
@@ -412,6 +456,9 @@ class DartEngine:
         if served:
             w = AD.window_stats(s.adaptive, self.acfg)
             out["window"] = {k: np.asarray(v) for k, v in w.items()}
+        req = ST.request_stats(s)
+        if req["requests"]:
+            out["requests"] = req
         return out
 
     # ------------------------------------------------------------------
@@ -424,7 +471,18 @@ class DartEngine:
 
     def restore_state(self, path: str, step: int | None = None):
         from repro import checkpoint as CK
-        restored, step, _ = CK.restore(path, self.state, step)
+        try:
+            restored, step, _ = CK.restore(path, self.state, step)
+        except ValueError as e:
+            if "leaf count" not in str(e):
+                raise
+            # Pre-latency-telemetry checkpoint: its leaves are a strict
+            # prefix of the current flatten order (state.LEGACY_FIELDS)
+            # — restore those and keep fresh latency counters.
+            legacy = [getattr(self.state, f) for f in ST.LEGACY_FIELDS]
+            leaves, step, _ = CK.restore(path, legacy, step)
+            restored = dataclasses.replace(
+                self.state, **dict(zip(ST.LEGACY_FIELDS, leaves)))
         self.state = restored
         return step
 

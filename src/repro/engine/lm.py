@@ -97,6 +97,15 @@ class LMDecodeEngine:
             params["embed"], t).astype(cfgc.compute_dtype))
 
     # ------------------------------------------------------------------
+    def session(self, cfg=None, **kw):
+        """Queue-backed session handle: drive this decode engine through
+        the async scheduler (deadlines, priorities, consolidation of
+        concurrent ``generate`` callers into shared bucketed decode
+        loops).  See :class:`repro.serving.LMDecodeSession`."""
+        from repro.serving.lm_session import LMDecodeSession
+        return LMDecodeSession(self, cfg=cfg, **kw)
+
+    # ------------------------------------------------------------------
     def init_cache(self, batch, max_len):
         return TLM.lm_init_cache(self.cfg, batch, max_len)
 

@@ -87,6 +87,7 @@ class ShardedDartEngine(DartEngine):
         self.mesh = mesh
         self.data_axis = data_axis
         self.n_replicas = int(mesh.shape[data_axis])
+        self.replica_multiple = self.n_replicas    # bucket_key granularity
         self._repl = NamedSharding(mesh, P())
         self._row = NamedSharding(mesh, P(data_axis))
         self._state_sh = self._state_shardings()
@@ -119,7 +120,11 @@ class ShardedDartEngine(DartEngine):
             adaptive={**{k: self._repl for k in shared},
                       **{k: self._row for k in bufs}},
             served=self._row, exit_counts=self._row,
-            total_macs=self._row, since_update=self._row)
+            total_macs=self._row, since_update=self._row,
+            # per-request latency telemetry: host-written, one global
+            # window per engine (no replica axis)
+            lat_ms=self._repl, lat_ptr=self._repl,
+            lat_count=self._repl, deadline_miss=self._repl)
 
     def _commit(self):
         """Re-pin the state to its sharding layout after any eager
@@ -173,18 +178,23 @@ class ShardedDartEngine(DartEngine):
     # ------------------------------------------------------------------
     # compiled step factories (cached per bucket)
     # ------------------------------------------------------------------
-    def _masked_step(self, bp: int, record: bool):
-        """Full DART serving step for a (bp,)-padded batch."""
-        key = ("masked", bp, record)
+    def _masked_step(self, bp: int, record: bool, with_alpha: bool = False):
+        """Full DART serving step for a (bp,)-padded batch.
+
+        ``with_alpha``: the variant that takes admission-time difficulty
+        as an operand instead of fusing the Eq. 8 estimator into the
+        step (used by the async scheduler, which estimated difficulty
+        once at enqueue)."""
+        key = ("masked-alpha" if with_alpha else "masked", bp, record)
         if key in self._steps:
             return self._steps[key]
         cum = jnp.asarray(self.cum_costs, jnp.float32)
 
-        def step(params, state, x, valid):
+        def step(params, state, x, valid, *aux):
             self._count_trace(key)
             logits = self._forward_traced(params, x)     # (E, bp, C)
             conf_stack = self._conf_fn(logits)
-            alpha = self._diff_fn(x, self.dcfg)
+            alpha = aux[0] if with_alpha else self._diff_fn(x, self.dcfg)
             eff = TH.adapt_thresholds(state.tau, self._coef_traced(state),
                                       alpha, state.beta_diff)
             exit_idx, conf = TH.select_exit(conf_stack, eff)
@@ -241,8 +251,8 @@ class ShardedDartEngine(DartEngine):
     # ------------------------------------------------------------------
     # inference
     # ------------------------------------------------------------------
-    def infer(self, x, mode: str = "masked", record: bool | None = None
-              ) -> dict:
+    def infer(self, x, mode: str = "masked", record: bool | None = None,
+              alpha=None, pad_to: int | None = None) -> dict:
         """Serve one request batch through the compiled path.
 
         mode="masked"    — one jitted step (serving hot path).
@@ -251,9 +261,14 @@ class ShardedDartEngine(DartEngine):
                            never records).
         record — fold serving counters + the §II.C window into the
                  sharded state (default ON for the compiled modes —
-                 they ARE the serving path — and OFF for the oracle)."""
+                 they ARE the serving path — and OFF for the oracle).
+        alpha  — optional (B,) admission-time difficulty (see
+                 ``DartEngine.infer``).
+        pad_to — accepted for API parity and ignored: every compiled
+                 path already pads to ``bucket_key(B)`` internally."""
         if mode == "eager":
-            return super()._infer_masked(np.asarray(x), record=False)
+            return super()._infer_masked(np.asarray(x), record=False,
+                                         alpha=alpha)
         if mode not in ("masked", "compacted"):
             raise ValueError(
                 f"unknown mode {mode!r}; known: masked, compacted, eager")
@@ -261,13 +276,15 @@ class ShardedDartEngine(DartEngine):
         x = np.asarray(x)
         b = x.shape[0]
         if b > self.compactor.max_bucket:
-            parts = [self._infer_chunk(x[a:z], mode, record)
-                     for a, z in self.compactor.chunks(b)]
+            parts = [self._infer_chunk(
+                x[a:z], mode, record,
+                alpha=None if alpha is None else alpha[a:z])
+                for a, z in self.compactor.chunks(b)]
             out = {k: np.concatenate([p[k] for p in parts])
                    for k in ("pred", "conf", "exit_idx", "alpha", "macs")}
             out["latency_s"] = sum(p["latency_s"] for p in parts)
         else:
-            out = self._infer_chunk(x, mode, record)
+            out = self._infer_chunk(x, mode, record, alpha=alpha)
         if record:
             self._maybe_update()
         return out
@@ -279,28 +296,34 @@ class ShardedDartEngine(DartEngine):
         return (jax.device_put(jnp.asarray(pad), self._row),
                 jax.device_put(jnp.asarray(valid), self._row))
 
-    def _infer_chunk(self, x, mode, record) -> dict:
+    def _infer_chunk(self, x, mode, record, alpha=None) -> dict:
         t0 = time.time()
         b = x.shape[0]
-        bp = self.compactor.padded_size(b, self.n_replicas)
+        bp = self.bucket_key(b)
         if mode == "masked":
             xp, valid = self._pad_batch(x, bp)
-            self.state, out = self._masked_step(bp, record)(
-                self.params, self.state, xp, valid)
+            step = self._masked_step(bp, record, alpha is not None)
+            if alpha is None:
+                self.state, out = step(self.params, self.state, xp, valid)
+            else:
+                ap = jax.device_put(jnp.asarray(self.compactor.pad(
+                    np.asarray(alpha, np.float32), bp)), self._row)
+                self.state, out = step(self.params, self.state, xp, valid,
+                                       ap)
             # Outputs stay ON DEVICE (lazy): a serving loop that doesn't
             # read them immediately pipelines compiled steps back to
             # back through the donated state chain.  np.asarray() on any
             # value materializes it.
             res = {k: v[:b] for k, v in out.items()}
         else:
-            res = self._compacted_chunk(x, bp, record)
+            res = self._compacted_chunk(x, bp, record, alpha=alpha)
         if record:
             self._pending += b
         res["latency_s"] = time.time() - t0
         self.total_latency_s += res["latency_s"]
         return res
 
-    def _compacted_chunk(self, x, bp, record) -> dict:
+    def _compacted_chunk(self, x, bp, record, alpha=None) -> dict:
         if not self.family.staged:
             raise ValueError(
                 f"compacted mode needs a staged family; "
@@ -308,7 +331,8 @@ class ShardedDartEngine(DartEngine):
                 f"mode='masked'")
         b = x.shape[0]
         xp, valid = self._pad_batch(x, bp)
-        alpha = np.asarray(self._alpha(xp))[:b]
+        alpha = np.asarray(self._alpha(xp))[:b] if alpha is None \
+            else np.asarray(alpha, np.float32)
 
         out_pred = np.zeros(b, np.int64)
         out_conf = np.zeros(b, np.float32)
@@ -323,7 +347,7 @@ class ShardedDartEngine(DartEngine):
         alpha_active = alpha
         for s in range(self.n_exits):
             n = len(active)
-            sp = self.compactor.padded_size(n, self.n_replicas)
+            sp = self.bucket_key(n)
             if s < self.n_exits - 1:
                 eff = np.asarray(TH.stage_threshold(
                     tau[s], coef[s], alpha_active, beta_diff))
@@ -395,6 +419,17 @@ class ShardedDartEngine(DartEngine):
         self._commit()
         return pol
 
+    def record_requests(self, latencies_ms, missed=None) -> None:
+        super().record_requests(latencies_ms, missed)
+        # Re-pin the freshly host-written latency leaves so the next
+        # donated step sees the same (replicated) layout every time.
+        s = self.state
+        self.state = dataclasses.replace(
+            s, lat_ms=jax.device_put(s.lat_ms, self._repl),
+            lat_ptr=jax.device_put(s.lat_ptr, self._repl),
+            lat_count=jax.device_put(s.lat_count, self._repl),
+            deadline_miss=jax.device_put(s.deadline_miss, self._repl))
+
     def restore_state(self, path: str, step: int | None = None):
         step = super().restore_state(path, step)
         self._pending = int(np.sum(np.asarray(self.state.since_update)))
@@ -421,4 +456,7 @@ class ShardedDartEngine(DartEngine):
         if served:
             w = AD.window_stats(ST.merged_adaptive(self.state), self.acfg)
             out["window"] = {k: np.asarray(v) for k, v in w.items()}
+        req = ST.request_stats(self.state)
+        if req["requests"]:
+            out["requests"] = req
         return out

@@ -17,12 +17,25 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import adaptive as AD
 from repro.core.routing import DartParams
 
 _FIELDS = ("tau", "coef", "beta_diff", "beta_opt", "adaptive",
-           "served", "exit_counts", "total_macs", "since_update")
+           "served", "exit_counts", "total_macs", "since_update",
+           "lat_ms", "lat_ptr", "lat_count", "deadline_miss")
+
+#: The pre-latency-telemetry field set.  The four latency leaves were
+#: APPENDED to ``_FIELDS``, so a checkpoint written before they existed
+#: is a strict prefix of the new flatten order — ``DartEngine.
+#: restore_state`` uses this to migrate old checkpoints (restored
+#: legacy fields + fresh latency counters).
+LEGACY_FIELDS = _FIELDS[:-4]
+
+#: Default size of the per-request latency ring buffer (requests, not
+#: samples — sized for percentile stability, not history).
+LAT_WINDOW = 2048
 
 
 @dataclasses.dataclass
@@ -38,6 +51,11 @@ class EngineState:
     exit_counts:  (E,) int32 — per-exit routed counts
     total_macs:   () float32 — cumulative MACs actually spent
     since_update: () int32 — samples since the last periodic update
+    lat_ms:       (W,) float32 — per-REQUEST latency ring buffer, written
+                  host-side by the ``repro.serving`` scheduler
+    lat_ptr:      () int32 — latency ring write cursor
+    lat_count:    () int32 — requests completed (lifetime)
+    deadline_miss: () int32 — requests completed past their deadline
     """
     tau: jnp.ndarray
     coef: jnp.ndarray
@@ -48,6 +66,10 @@ class EngineState:
     exit_counts: jnp.ndarray
     total_macs: jnp.ndarray
     since_update: jnp.ndarray
+    lat_ms: jnp.ndarray
+    lat_ptr: jnp.ndarray
+    lat_count: jnp.ndarray
+    deadline_miss: jnp.ndarray
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
@@ -60,7 +82,8 @@ class EngineState:
     # -- construction ---------------------------------------------------
     @classmethod
     def create(cls, n_exits: int, acfg: AD.AdaptiveConfig,
-               dart: DartParams | None = None) -> "EngineState":
+               dart: DartParams | None = None,
+               lat_window: int = LAT_WINDOW) -> "EngineState":
         dart = dart or DartParams.default(n_exits)
         return cls(
             tau=jnp.asarray(dart.tau, jnp.float32),
@@ -72,6 +95,10 @@ class EngineState:
             exit_counts=jnp.zeros((n_exits,), jnp.int32),
             total_macs=jnp.zeros((), jnp.float32),
             since_update=jnp.zeros((), jnp.int32),
+            lat_ms=jnp.zeros((lat_window,), jnp.float32),
+            lat_ptr=jnp.zeros((), jnp.int32),
+            lat_count=jnp.zeros((), jnp.int32),
+            deadline_miss=jnp.zeros((), jnp.int32),
         )
 
     # -- views ----------------------------------------------------------
@@ -101,6 +128,60 @@ jax.tree_util.register_pytree_node(
     EngineState,
     lambda s: s.tree_flatten(),
     EngineState.tree_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Per-request serving telemetry (latency / deadline SLO)
+# ---------------------------------------------------------------------------
+# Unlike the per-SAMPLE counters above (folded on device inside the
+# compiled step), request latency is a host-side quantity — the clock
+# starts at submit() and stops when the scheduler materializes the
+# result — so these two helpers run eagerly on numpy and the scheduler
+# folds the outcome back into the state between steps.  The leaves stay
+# replicated under sharding (one global latency window per engine).
+
+def record_requests(state: EngineState, latencies_ms,
+                    missed=None) -> EngineState:
+    """Fold a batch of completed requests into the latency ring buffer.
+
+    latencies_ms: (k,) per-request wall latency; ``missed``: optional
+    (k,) bools — completed after the request's deadline."""
+    lat = np.atleast_1d(np.asarray(latencies_ms, np.float32))
+    k, w = lat.shape[0], state.lat_ms.shape[0]
+    if k == 0:
+        return state
+    buf = np.asarray(state.lat_ms).copy()
+    idx = (int(state.lat_ptr) + np.arange(k)) % w
+    buf[idx] = lat
+    n_miss = int(np.sum(missed)) if missed is not None else 0
+    return dataclasses.replace(
+        state,
+        lat_ms=jnp.asarray(buf),
+        lat_ptr=jnp.asarray((int(state.lat_ptr) + k) % w, jnp.int32),
+        lat_count=state.lat_count + jnp.asarray(k, jnp.int32),
+        deadline_miss=state.deadline_miss + jnp.asarray(n_miss, jnp.int32))
+
+
+def latency_percentiles(lat_ms) -> dict:
+    """p50/p95/p99/mean summary of a latency sample (ms).  The one
+    implementation behind every ``stats()["requests"]["latency_ms"]``
+    report (engine request_stats, LM decode sessions)."""
+    lat = np.asarray(lat_ms, np.float32)
+    p50, p95, p99 = np.percentile(lat, [50.0, 95.0, 99.0])
+    return {"p50": float(p50), "p95": float(p95), "p99": float(p99),
+            "mean": float(lat.mean())}
+
+
+def request_stats(state: EngineState) -> dict:
+    """Windowed latency percentiles + lifetime deadline-miss rate."""
+    n = int(state.lat_count)
+    miss = int(state.deadline_miss)
+    out = {"requests": n, "deadline_miss": miss,
+           "miss_rate": miss / max(n, 1)}
+    if n:
+        out["latency_ms"] = latency_percentiles(
+            np.asarray(state.lat_ms)[:min(n, state.lat_ms.shape[0])])
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -5,7 +5,7 @@ The final head uses the same global-average-pool convention.
 
 Covers assigned archs ``vit-s16`` and ``vit-h14`` (and their reduced smoke
 variants).  Implements the generic *staged* vision-classifier interface
-used by the DART serving engine (``repro.runtime.server``):
+used by the DART serving engine (``repro.engine``):
 
   ``num_stages(cfg)``, ``apply_stem``, ``apply_stage``, ``apply_exit``.
 

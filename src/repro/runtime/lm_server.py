@@ -13,8 +13,18 @@ scheduled for removal in PR 4 — port imports to ``repro.engine``.
 """
 from __future__ import annotations
 
+import warnings
+
 from repro.engine.lm import LMDecodeEngine
 
 
 class LMDecodeServer(LMDecodeEngine):
     """Deprecated: use :class:`repro.engine.LMDecodeEngine`."""
+
+    def __init__(self, *a, **kw):
+        warnings.warn(
+            "repro.runtime.lm_server.LMDecodeServer is deprecated and "
+            "will be removed in PR 4; use repro.engine.LMDecodeEngine "
+            "(and .session() for queue-backed decoding) instead",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*a, **kw)

@@ -20,6 +20,7 @@ is engine-only and has no shim.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -53,6 +54,11 @@ class DartServer:
                  dcfg: DIFF.DifficultyConfig = DIFF.DEFAULT,
                  use_kernel: bool = True, buckets=None,
                  adapt: bool = True, update_every: int = 100):
+        warnings.warn(
+            "repro.runtime.server.DartServer is deprecated and will be "
+            "removed in PR 4; use repro.engine.DartEngine (or "
+            "repro.serving.AsyncDartServer for async serving) instead",
+            DeprecationWarning, stacklevel=2)
         self.engine = DartEngine.from_config(
             model_cfg, params, dart=dart, adaptive_cfg=adaptive_cfg,
             dcfg=dcfg, cum_costs=cum_costs, buckets=buckets,

@@ -1,0 +1,46 @@
+"""repro.serving — async, difficulty-aware request scheduling.
+
+The serving layer the paper's pitch implies but the engines alone don't
+provide: callers submit individual requests (with deadlines and
+priorities) and a scheduler consolidates them into compiled-bucket
+batches, packing by PREDICTED cost — the Eq. 8 difficulty estimator is
+cheap enough to run at admission, before the model executes — so easy
+traffic never waits behind hard traffic:
+
+    from repro.engine import DartEngine
+    from repro.serving import AsyncDartServer
+
+    engine = DartEngine.from_config(model_cfg, params)
+    with AsyncDartServer(engine) as server:
+        fut = server.submit(x, deadline_ms=50, priority=1)
+        out = fut.result()        # engine.infer keys + latency_ms + SLO
+        print(server.stats()["requests"]["latency_ms"])   # p50/p95/p99
+
+Pieces:
+
+* :class:`AsyncDartServer` — the scheduler façade (loop.py): background
+  dispatcher, size-or-deadline flush, pipelined sharded dispatch.
+* :class:`SchedulerConfig` — its knobs (flush/hold timing, backpressure
+  policy ``shed`` | ``reject`` | ``degrade-alpha``, bucket targets).
+* :class:`AdmissionPlanner` — Eq. 8 difficulty + telemetry-prior cost
+  prediction at enqueue (planner.py).
+* :class:`RequestQueue` — lane-keyed backpressure queue (queue.py).
+* :class:`LMDecodeSession` — the same scheduling over
+  ``LMDecodeEngine.generate`` (lm_session.py); reach it via
+  ``engine.session()``.
+
+Scheduling never changes routing under a fixed policy: every completed
+request's outputs are identical to serving it alone through
+``engine.infer`` (the admission alpha is handed to the engine, Alg. 1
+runs unchanged).  With §II.C adaptation on, request reordering shifts
+where the periodic coefficient updates fall — see docs/serving.md.
+"""
+from repro.serving.loop import AsyncDartServer, SchedulerConfig
+from repro.serving.lm_session import LMDecodeSession
+from repro.serving.planner import AdmissionPlanner
+from repro.serving.queue import RequestQueue
+from repro.serving.request import (Request, RequestRejected, RequestShed)
+
+__all__ = ["AsyncDartServer", "SchedulerConfig", "AdmissionPlanner",
+           "RequestQueue", "LMDecodeSession", "Request",
+           "RequestRejected", "RequestShed"]

@@ -1,0 +1,91 @@
+"""LMDecodeSession — queue-backed session handle over LMDecodeEngine.
+
+The API seam for driving early-exit LM decoding through the same
+scheduler machinery as classifier serving (ROADMAP: the full
+sharded-step port of LM decode builds on this):
+
+    session = engine.session()                 # LMDecodeEngine.session
+    fut = session.submit(prompt_tokens, n_new=16, deadline_ms=500)
+    out = fut.result()                         # {"tokens", "stages", ...}
+
+Requests are laned by ``(prompt_len, n_new)`` — the two quantities that
+fix the compiled decode shapes — and consolidated into one
+``generate`` call per flushed bucket, so N concurrent callers share one
+bucketed decode loop instead of N.  Deadlines, priorities, backpressure
+and the size-or-deadline flush policy behave exactly as in
+:class:`~repro.serving.loop.AsyncDartServer`.
+"""
+from __future__ import annotations
+
+from collections import deque
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serving.loop import SchedulerConfig, _BucketScheduler
+from repro.serving.request import Request
+
+
+class LMDecodeSession(_BucketScheduler):
+    def __init__(self, engine, cfg: SchedulerConfig | None = None, **kw):
+        self.engine = engine
+        self._lat_ms: deque = deque(maxlen=2048)
+        self._miss = 0
+        cfg = cfg or SchedulerConfig(max_batch=engine.compactor.max_bucket,
+                                     policy="reject")
+        super().__init__(cfg, **kw)
+
+    # -- hooks ----------------------------------------------------------
+    def _bucket_key(self, n: int) -> int:
+        if n > self.engine.compactor.max_bucket:
+            return n            # oversized: generate() chunk-splits
+        return self.engine.compactor.bucket_for(n)
+
+    def _max_batch_cap(self) -> int:
+        return self.engine.compactor.max_bucket
+
+    def _admit(self, prompt_tokens, deadline_ms, priority, *, now,
+               n_new: int) -> Request:
+        x = np.asarray(prompt_tokens)
+        if x.ndim == 1:
+            x = x[None]
+        return Request(
+            rid=next(self._rid), x=x, n=x.shape[0],
+            alpha=np.zeros(x.shape[0], np.float32),
+            lane=(x.shape[1], int(n_new)), predicted_cost=float(n_new),
+            priority=priority, t_submit=now,
+            deadline_s=None if deadline_ms is None
+            else now + deadline_ms / 1e3,
+            future=Future(), payload={"n_new": int(n_new)})
+
+    def _dispatch(self, reqs: list, reason: str) -> None:
+        n_new = reqs[0].payload["n_new"]
+        prompts = np.concatenate([r.x for r in reqs])
+        tokens, stages = self.engine.generate(prompts, n_new)
+        now = self._clock()
+        ends = np.cumsum([r.n for r in reqs])
+        for r, a, z in zip(reqs, np.concatenate([[0], ends[:-1]]), ends):
+            lat_ms = (now - r.t_submit) * 1e3
+            miss = r.deadline_s is not None and now > r.deadline_s
+            self._lat_ms.append(lat_ms)
+            self._miss += bool(miss)
+            r.resolve({"tokens": tokens[a:z], "stages": stages[a:z],
+                       "latency_ms": lat_ms, "deadline_missed": miss,
+                       "lane": r.lane})
+        self.counters["completed"] += len(reqs)
+
+    # -- metering -------------------------------------------------------
+    def stats(self) -> dict:
+        n = self.counters["completed"]
+        out = {"scheduler": {**self.counters, "shed": self.queue.shed,
+                             "rejected": self.queue.rejected},
+               "requests": {"requests": n, "deadline_miss": self._miss,
+                            "miss_rate": self._miss / max(n, 1)},
+               "exit_hist": np.asarray(self.engine.stats_exit).tolist(),
+               "layers_run": self.engine.layers_run,
+               "layers_skipped": self.engine.layers_skipped}
+        if self._lat_ms:
+            from repro.engine.state import latency_percentiles
+            out["requests"]["latency_ms"] = \
+                latency_percentiles(self._lat_ms)
+        return out

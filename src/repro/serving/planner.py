@@ -1,0 +1,102 @@
+"""AdmissionPlanner — difficulty-aware cost prediction at enqueue.
+
+The paper's Eq. 8 estimator is cheap enough (≈79 KFLOPs/image, §III.B)
+to run at ADMISSION time, before the model sees the input.  That turns
+the scheduler's packing problem tractable: every request gets
+
+* ``alpha``          — its Eq. 8 difficulty, estimated once here and
+  handed to the engine at dispatch (``infer(..., alpha=...)``), so the
+  estimator never runs twice;
+* a difficulty CLASS — ``digitize(mean alpha, edges)``; the scheduler
+  lanes/buckets requests per class, so buckets stay cost-homogeneous;
+* ``predicted_cost`` — expected normalized MACs/sample, from the
+  telemetry prior: a per-class EMA of the exit depths the scheduler
+  actually observed (cold start: depth grows linearly in alpha, the
+  Eq. 19 first-order effect of difficulty on thresholds).
+
+Under ``degrade-alpha`` backpressure the planner re-admits the request
+with a scaled-down alpha: Eq. 19 lowers every gate's threshold for
+easier inputs, so the request exits earlier and costs less — graceful
+quality degradation instead of queue growth.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adaptive as AD
+from repro.core import difficulty as DIFF
+
+
+class AdmissionPlanner:
+    def __init__(self, engine, edges=(0.35, 0.65), ema_decay: float = 0.9):
+        self.engine = engine
+        self.edges = np.asarray(edges, np.float32)
+        self.n_classes = len(self.edges) + 1
+        self.ema_decay = float(ema_decay)
+        self._depth_ema = [None] * self.n_classes
+        self._lock = threading.Lock()
+        cum = np.asarray(engine.cum_costs, np.float64)
+        self._cum_norm = cum / cum[-1]
+        # Exit-count prior from telemetry: an engine that has already
+        # served (e.g. restored from a checkpoint) seeds the cold-start
+        # depth prediction from its §II.C window instead of the linear-
+        # in-alpha guess.
+        self._global_depth = None
+        if int(np.sum(np.asarray(engine.state.served))):
+            adaptive = engine.state.adaptive
+            if hasattr(engine, "n_replicas"):       # merge replica windows
+                from repro.engine import state as EST
+                adaptive = EST.merged_adaptive(engine.state)
+            self._global_depth = float(
+                AD.window_exit_depth(adaptive, engine.acfg))
+
+    # ------------------------------------------------------------------
+    def admit(self, x: np.ndarray):
+        """(alpha (n,), difficulty class, predicted cost/sample)."""
+        alpha = np.asarray(self.engine._alpha(jnp.asarray(x)), np.float32)
+        return (alpha,) + self.classify(alpha)
+
+    def classify(self, alpha: np.ndarray):
+        """(difficulty class, predicted cost) for an already-known alpha
+        (the degrade-alpha re-admission path)."""
+        a = float(np.mean(alpha))
+        dclass = int(DIFF.difficulty_class(a, self.edges))
+        return dclass, self.predicted_cost(a, dclass)
+
+    def predicted_cost(self, alpha_mean: float, dclass: int) -> float:
+        """Expected normalized MACs/sample: telemetry-prior exit depth
+        (per-class EMA, falling back to the engine's window-wide depth,
+        then to linear-in-alpha) run through the engine's cumulative
+        cost curve."""
+        with self._lock:
+            depth = self._depth_ema[dclass]
+            if depth is None:
+                depth = self._global_depth
+        if depth is None:
+            depth = alpha_mean * (self.engine.n_exits - 1)
+        return float(np.interp(depth, np.arange(self.engine.n_exits),
+                               self._cum_norm))
+
+    def observe(self, exit_idx: np.ndarray, alpha: np.ndarray) -> None:
+        """Fold served outcomes back into the per-class depth priors."""
+        exit_idx = np.asarray(exit_idx)
+        dclass = np.asarray(DIFF.difficulty_class(
+            np.asarray(alpha, np.float32), self.edges))
+        d_all = float(np.mean(exit_idx))
+        with self._lock:
+            self._global_depth = d_all if self._global_depth is None else \
+                self.ema_decay * self._global_depth \
+                + (1.0 - self.ema_decay) * d_all
+            for c in np.unique(dclass):
+                d = float(np.mean(exit_idx[dclass == c]))
+                prev = self._depth_ema[int(c)]
+                self._depth_ema[int(c)] = d if prev is None else \
+                    self.ema_decay * prev + (1.0 - self.ema_decay) * d
+
+    def priors(self) -> list:
+        """Current per-class expected exit depth (None = never seen)."""
+        with self._lock:
+            return list(self._depth_ema)

@@ -1,0 +1,67 @@
+"""Request objects and completion futures for the async scheduler.
+
+A ``Request`` is one caller-submitted sample batch travelling through
+the scheduler: admitted (difficulty estimated, cost predicted), queued
+in a difficulty-class lane, flushed as part of a consolidated bucket,
+and finally resolved through its ``concurrent.futures.Future``.
+
+Backpressure outcomes surface as exceptions ON THE FUTURE — submit
+itself never raises for load reasons, so producers keep a uniform
+``submit(...).result()`` call shape:
+
+* :class:`RequestShed`     — evicted by a higher-priority arrival
+  (``policy="shed"``).
+* :class:`RequestRejected` — refused at admission because the lane was
+  full (``policy="reject"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import Future
+
+import numpy as np
+
+
+class RequestShed(RuntimeError):
+    """Queued request evicted to make room for higher-priority work."""
+
+
+class RequestRejected(RuntimeError):
+    """Request refused at admission (lane over its queue limit)."""
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight request (a sample batch + its admission metadata).
+
+    rid:            monotonically increasing id (FIFO tiebreaker)
+    x:              (n, ...) the request's samples
+    n:              number of samples
+    alpha:          (n,) Eq. 8 difficulty, estimated once at admission
+    lane:           scheduler lane key (difficulty class, or (S, n_new)
+                    for LM decode)
+    predicted_cost: expected normalized MACs/sample (admission planner)
+    priority:       larger = more important; sheds last
+    t_submit:       scheduler-clock seconds at submit
+    deadline_s:     absolute scheduler-clock deadline (None = best effort)
+    future:         resolves to the per-request result dict
+    """
+    rid: int
+    x: np.ndarray
+    n: int
+    alpha: np.ndarray
+    lane: object
+    predicted_cost: float
+    priority: int
+    t_submit: float
+    deadline_s: float | None
+    future: Future
+    payload: dict = dataclasses.field(default_factory=dict)
+
+    def fail(self, exc: Exception) -> None:
+        if not self.future.done():
+            self.future.set_exception(exc)
+
+    def resolve(self, result: dict) -> None:
+        if not self.future.done():
+            self.future.set_result(result)

@@ -1,15 +1,21 @@
 """Serving engine: compacted execution == masked Alg. 1 reference,
-adaptive updates, cost accounting."""
+adaptive updates, cost accounting — on the ``repro.engine`` API.
+
+(The legacy ``DartServer``/``LMDecodeServer`` shims are down to ONE
+test here, asserting they still delegate and now emit
+``DeprecationWarning``; everything else runs on ``DartEngine`` so the
+planned PR-4 shim removal only deletes that test.)
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.routing import DartParams
 from repro.data.datasets import DatasetConfig, make_batch
+from repro.engine import BatchTooLarge, DartEngine
 from repro.models.cnn_zoo import AlexNetConfig
 from repro.models.vit import ViTConfig, vit_init
 from repro.parallel.sharding import unzip
-from repro.runtime.server import DartServer, _next_bucket
 from repro.runtime.trainer import Trainer, TrainConfig
 
 import jax
@@ -26,13 +32,37 @@ def trained_cnn():
     return mc, tr.params
 
 
+def _engine(mc, params, dart, **kw):
+    kw.setdefault("cum_costs", [0.3, 0.7, 1.0])
+    kw.setdefault("adapt", False)
+    return DartEngine.from_config(mc, params, dart=dart, **kw)
+
+
 def test_bucket_rounding():
-    assert _next_bucket(1, (1, 2, 4, 8)) == 1
-    assert _next_bucket(3, (1, 2, 4, 8)) == 4
+    from repro.engine import BatchCompactor
+    c = BatchCompactor((1, 2, 4, 8))
+    assert c.bucket_for(1) == 1
+    assert c.bucket_for(3) == 4
     # n > max bucket used to clamp (negative pad silently corrupted
-    # infer_batch); it must now raise — oversized batches are split.
-    with pytest.raises(ValueError):
-        _next_bucket(9, (1, 2, 4, 8))
+    # serving); it must now raise — oversized batches are split.
+    with pytest.raises(BatchTooLarge):
+        c.bucket_for(9)
+
+
+def test_bucket_key_is_the_shared_cache_key(trained_cnn):
+    """Eager and sharded engines must agree on what shares a compiled
+    shape: ``engine.bucket_key`` = bucket rounded to a replica multiple."""
+    mc, params = trained_cnn
+    dart = DartParams(tau=jnp.full((2,), 0.35), coef=jnp.ones(2))
+    eager = _engine(mc, params, dart)
+    assert eager.replica_multiple == 1
+    assert [eager.bucket_key(n) for n in (1, 3, 5, 9)] == [1, 4, 8, 16]
+    from repro.launch.mesh import make_serving_mesh
+    sharded = _engine(mc, params, dart, mesh=make_serving_mesh())
+    assert sharded.replica_multiple == sharded.n_replicas
+    for n in (1, 3, 5, 9):
+        assert sharded.bucket_key(n) % sharded.n_replicas == 0
+        assert sharded.bucket_key(n) >= eager.bucket_key(n)
 
 
 def test_oversized_batch_is_split_not_corrupted(trained_cnn):
@@ -41,16 +71,15 @@ def test_oversized_batch_is_split_not_corrupted(trained_cnn):
     mc, params = trained_cnn
     dart = DartParams(tau=jnp.full((2,), 0.35), coef=jnp.ones(2),
                       beta_diff=0.3)
-    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
-                     adapt=False, buckets=(1, 2, 4, 8, 16))
+    eng = _engine(mc, params, dart, buckets=(1, 2, 4, 8, 16))
     x, _ = make_batch(DATA, range(40), split="eval")    # 40 > 16
-    out = srv.infer_batch(x)
-    ref = srv.masked_reference(x)
+    out = eng.infer(x, mode="compacted")
+    ref = eng.infer(x, mode="masked")
     assert len(out["pred"]) == 40
     np.testing.assert_array_equal(out["exit_idx"],
                                   np.asarray(ref["exit_idx"]))
     np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
-    assert srv.stats.served == 40
+    assert int(eng.state.served) == 40
 
 
 @pytest.mark.parametrize("tau", [0.0, 0.35, 0.9])
@@ -60,24 +89,61 @@ def test_compacted_equals_masked(trained_cnn, tau):
     mc, params = trained_cnn
     dart = DartParams(tau=jnp.full((2,), tau), coef=jnp.ones(2),
                       beta_diff=0.3)
-    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
-                     adapt=False)
+    eng = _engine(mc, params, dart)
     x, y = make_batch(DATA, range(48), split="eval")
-    out = srv.infer_batch(x)
-    ref = srv.masked_reference(x)
+    out = eng.infer(x, mode="compacted")
+    ref = eng.infer(x, mode="masked")
     np.testing.assert_array_equal(out["exit_idx"], np.asarray(ref["exit_idx"]))
     np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
     np.testing.assert_allclose(out["conf"], np.asarray(ref["conf"]),
                                rtol=2e-5, atol=2e-5)
 
 
+def test_precomputed_alpha_matches_internal_estimate(trained_cnn):
+    """infer(alpha=...) with the admission-time Eq. 8 estimate must be
+    indistinguishable from the engine estimating difficulty itself (the
+    async scheduler depends on this)."""
+    mc, params = trained_cnn
+    dart = DartParams(tau=jnp.full((2,), 0.35), coef=jnp.ones(2),
+                      beta_diff=0.3)
+    eng = _engine(mc, params, dart)
+    x, _ = make_batch(DATA, range(24), split="eval")
+    alpha = np.asarray(eng._alpha(jnp.asarray(x)))
+    for mode in ("masked", "compacted"):
+        ref = eng.infer(x, mode=mode, record=False)
+        out = eng.infer(x, mode=mode, record=False, alpha=alpha)
+        np.testing.assert_array_equal(np.asarray(out["exit_idx"]),
+                                      np.asarray(ref["exit_idx"]))
+        np.testing.assert_array_equal(np.asarray(out["pred"]),
+                                      np.asarray(ref["pred"]))
+
+
+def test_masked_pad_to_bucket_is_transparent(trained_cnn):
+    """infer(mode="masked", pad_to=bucket) must neither change outputs
+    nor leak padded lanes into telemetry (the async scheduler pads every
+    consolidated dispatch to its bucket)."""
+    mc, params = trained_cnn
+    dart = DartParams(tau=jnp.full((2,), 0.35), coef=jnp.ones(2),
+                      beta_diff=0.3)
+    eng = _engine(mc, params, dart, adapt=True, update_every=10 ** 9)
+    x, _ = make_batch(DATA, range(11), split="eval")
+    ref = eng.infer(x, mode="masked", record=False)
+    out = eng.infer(x, mode="masked", record=True,
+                    pad_to=eng.bucket_key(11))
+    for k in ("exit_idx", "pred", "alpha"):
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(ref[k]))
+    assert out["pred"].shape == (11,)
+    assert out["conf_stack"].shape[1] == 11
+    assert int(eng.state.served) == 11      # padding never recorded
+
+
 def test_zero_threshold_exits_everything_early(trained_cnn):
     mc, params = trained_cnn
     dart = DartParams(tau=jnp.zeros(2), coef=jnp.zeros(2), beta_diff=0.0)
-    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
-                     adapt=False)
+    eng = _engine(mc, params, dart)
     x, _ = make_batch(DATA, range(16), split="eval")
-    out = srv.infer_batch(x)
+    out = eng.infer(x, mode="compacted")
     assert np.all(out["exit_idx"] == 0)
     assert out["macs"].mean() == pytest.approx(0.3)
 
@@ -86,49 +152,77 @@ def test_infinite_threshold_never_exits_early(trained_cnn):
     mc, params = trained_cnn
     dart = DartParams(tau=jnp.ones(2), coef=jnp.full((2,), 10.0),
                       beta_diff=1.0)
-    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
-                     adapt=False)
+    eng = _engine(mc, params, dart)
     x, _ = make_batch(DATA, range(16), split="eval")
-    out = srv.infer_batch(x)
+    out = eng.infer(x, mode="compacted")
     assert np.all(out["exit_idx"] == 2)
 
 
 def test_adaptive_state_progresses(trained_cnn):
     mc, params = trained_cnn
     dart = DartParams(tau=jnp.full((2,), 0.4), coef=jnp.ones(2))
-    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
-                     adapt=True, update_every=16)
+    eng = _engine(mc, params, dart, adapt=True, update_every=16)
     x, _ = make_batch(DATA, range(64), split="eval")
     for i in range(0, 64, 16):
-        srv.infer_batch(x[i:i + 16])
-    assert int(srv.astate["seen"]) == 64
-    assert int(srv.astate["t"]) >= 3          # UCB updates happened
-    assert srv.stats.served == 64
+        eng.infer(x[i:i + 16], mode="compacted")
+    assert int(eng.state.adaptive["seen"]) == 64
+    assert int(eng.state.adaptive["t"]) >= 3      # UCB updates happened
+    assert int(eng.state.served) == 64
 
 
 def test_exit_stats_accounting(trained_cnn):
     mc, params = trained_cnn
     dart = DartParams(tau=jnp.full((2,), 0.2), coef=jnp.ones(2),
                       beta_diff=0.1)
-    srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
-                     adapt=False)
+    eng = _engine(mc, params, dart)
     x, _ = make_batch(DATA, range(32), split="eval")
-    out = srv.infer_batch(x)
-    assert srv.stats.exit_counts.sum() == 32
+    out = eng.infer(x, mode="compacted")
+    assert np.asarray(eng.state.exit_counts).sum() == 32
     want = np.array([0.3, 0.7, 1.0])[out["exit_idx"]]
     np.testing.assert_allclose(out["macs"], want)
 
 
-def test_server_works_for_vit():
+def test_engine_works_for_vit():
     vc = ViTConfig(name="vt", img_res=32, patch=8, n_layers=3, d_model=32,
                    n_heads=2, d_ff=64, n_classes=10, exit_layers=(0, 1))
     params, _ = unzip(vit_init(jax.random.key(0), vc))
     dart = DartParams(tau=jnp.full((2,), 0.2), coef=jnp.ones(2))
-    srv = DartServer(vc, params, dart, cum_costs=[0.4, 0.7, 1.0],
-                     adapt=False)
+    eng = DartEngine.from_config(vc, params, dart=dart,
+                                 cum_costs=[0.4, 0.7, 1.0], adapt=False)
     x, _ = make_batch(DATA, range(8), split="eval")
-    out = srv.infer_batch(x)
-    ref = srv.masked_reference(x)
+    out = eng.infer(x, mode="compacted")
+    ref = eng.infer(x, mode="masked")
     np.testing.assert_array_equal(out["exit_idx"],
                                   np.asarray(ref["exit_idx"]))
     np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+
+
+def test_legacy_shims_warn_and_delegate(trained_cnn):
+    """The PR-4 removal of runtime.server / runtime.lm_server must be a
+    pure delete: the shims emit DeprecationWarning and only delegate."""
+    mc, params = trained_cnn
+    from repro.runtime.server import DartServer
+    dart = DartParams(tau=jnp.full((2,), 0.35), coef=jnp.ones(2),
+                      beta_diff=0.3)
+    with pytest.warns(DeprecationWarning, match="DartServer is deprecated"):
+        srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
+                         adapt=False)
+    x, _ = make_batch(DATA, range(8), split="eval")
+    out = srv.infer_batch(x)
+    ref = srv.engine.infer(x, mode="masked")
+    np.testing.assert_array_equal(out["exit_idx"],
+                                  np.asarray(ref["exit_idx"]))
+    assert srv.stats.served == 8
+
+    from repro.models.transformer_lm import LMConfig
+    from repro.runtime.lm_server import LMDecodeServer
+    from repro.runtime.trainer import Trainer, TrainConfig
+    lc = LMConfig(name="lm-shim", n_layers=2, d_model=16, n_heads=2,
+                  n_kv_heads=1, d_ff=32, vocab=16, exit_layers=(0,),
+                  max_seq=16, remat=False)
+    tr = Trainer(lc, TrainConfig(batch_size=4, steps=1, lr=1e-3),
+                 DatasetConfig(name="tokens", n_train=32),
+                 data_kind="tokens")
+    tr.run()
+    with pytest.warns(DeprecationWarning, match="LMDecodeServer"):
+        LMDecodeServer(lc, tr.params, dart)

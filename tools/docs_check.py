@@ -1,22 +1,29 @@
-"""Lint the docs: compile every fenced python snippet and verify every
-intra-repo link resolves.
+"""Lint the docs: compile every fenced python snippet, verify every
+intra-repo link resolves, and verify every ``repro.*`` import a snippet
+makes actually exists in the source tree.
 
 Checks (run by ``make docs-check``, which ``make test`` depends on):
 
 1. every ```python fenced block in docs/*.md and README.md must be
    syntactically valid Python (``compile(..., "exec")``);
 2. every relative markdown link/image target must exist on disk
-   (anchors are stripped; external http(s)/mailto links are skipped).
+   (anchors are stripped; external http(s)/mailto links are skipped);
+3. every ``import repro...`` / ``from repro... import name`` in a
+   snippet must resolve: the module file exists under src/, and each
+   imported name appears in it (so docs can't drift from the API —
+   checked statically, nothing is executed).
 
 Usage:  python tools/docs_check.py [files...]   (default: README.md docs/)
 """
 from __future__ import annotations
 
+import ast
 import pathlib
 import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
 
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
 # [text](target) and ![alt](target); target up to the first ')' —
@@ -41,6 +48,43 @@ def python_blocks(text: str):
             block.append(line)
 
 
+def _module_file(dotted: str) -> pathlib.Path | None:
+    """src/ file for a ``repro.x.y`` module path, or None."""
+    p = SRC.joinpath(*dotted.split("."))
+    for cand in (p.with_suffix(".py"), p / "__init__.py"):
+        if cand.exists():
+            return cand
+    return None
+
+
+def check_repro_imports(tree: ast.AST) -> list[str]:
+    """Stale-API check: every repro.* import must resolve statically."""
+    errors = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == "repro" \
+                        and _module_file(alias.name) is None:
+                    errors.append(
+                        f"unknown module '{alias.name}' (line {node.lineno})")
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.split(".")[0] == "repro":
+            mod = _module_file(node.module)
+            if mod is None:
+                errors.append(f"unknown module '{node.module}' "
+                              f"(line {node.lineno})")
+                continue
+            text = mod.read_text()
+            for alias in node.names:
+                if _module_file(f"{node.module}.{alias.name}"):
+                    continue            # submodule import
+                if not re.search(rf"\b{re.escape(alias.name)}\b", text):
+                    errors.append(
+                        f"'{alias.name}' not found in {node.module} "
+                        f"(line {node.lineno})")
+    return errors
+
+
 def check_file(path: pathlib.Path) -> list[str]:
     errors = []
     text = path.read_text()
@@ -54,6 +98,9 @@ def check_file(path: pathlib.Path) -> list[str]:
         except SyntaxError as e:
             errors.append(f"{rel}:{line + (e.lineno or 1) - 1}: "
                           f"snippet does not compile: {e.msg}")
+            continue
+        for msg in check_repro_imports(ast.parse(src)):
+            errors.append(f"{rel}:{line}: {msg}")
     for m in LINK_RE.finditer(text):
         target = m.group(1).split("#", 1)[0]
         if not target or target.startswith(EXTERNAL):
