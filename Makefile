@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke engine-test bench bench-serving bench-async docs-check \
-    deps
+.PHONY: test smoke engine-test bench bench-serving bench-async bench-lm \
+    docs-check deps
 
 # Tier-1 verify (ROADMAP): docs lint + the full test suite, fail-fast.
 test: docs-check
@@ -10,8 +10,9 @@ test: docs-check
 
 # Engine-focused subset (fast iteration on the serving path).
 engine-test:
-	$(PY) -m pytest -q tests/test_engine.py tests/test_server.py \
-	    tests/test_sharded_engine.py tests/test_serving.py
+	$(PY) -m pytest -q tests/test_engine.py \
+	    tests/test_engine_serving_compat.py tests/test_sharded_engine.py \
+	    tests/test_serving.py tests/test_lm_sharded.py
 
 # End-to-end smoke: quickstart with tiny settings (~1 min on CPU).
 smoke:
@@ -29,6 +30,11 @@ bench-serving:
 # eager dispatch (>= 2x sustained throughput at equal p95).
 bench-async:
 	$(PY) -m benchmarks.serving_async
+
+# Sharded bucketed LM decode session vs eager per-request decode
+# (>= 1.5x tokens/s at equal p95; JSON to artifacts/perf/).
+bench-lm:
+	$(PY) -m benchmarks.serving_lm
 
 # Lint docs/ + README: compile python snippets, validate intra-repo links.
 docs-check:

@@ -5,16 +5,26 @@ dry-run and prints the before/after roofline terms per iteration,
 together with the napkin-math hypothesis that motivated each change.
 
   PYTHONPATH=src python -m benchmarks.perf_iterate [--cell N]
+  PYTHONPATH=src python -m benchmarks.perf_iterate --serving
+  PYTHONPATH=src python -m benchmarks.perf_iterate --smoke
+
+``--serving`` runs the measured serving benchmarks (sharded, async
+scheduler, LM decode) in subprocesses; ``--smoke`` is the CI variant:
+the fast LM-decode sweep only, with its JSON consolidated into
+``artifacts/perf/smoke.json`` for the workflow's artifact upload.
 """
 import os
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
+import sys
+
+# The dry-run cells want 512 fake devices; the measured serving cells
+# must NOT inherit that (they time real dispatch on the host's cores),
+# so only set the flag when this process will actually lower cells.
+if "--serving" not in sys.argv and "--smoke" not in sys.argv:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
 
 import argparse
 import json
-
-from repro.launch.dryrun import run_cell
-from benchmarks.roofline import roofline
 
 OUT = "artifacts/perf"
 
@@ -72,6 +82,8 @@ PLAN = [
 
 
 def iterate_cell(arch, shape, variants, multi_pod=False):
+    from repro.launch.dryrun import run_cell
+    from benchmarks.roofline import roofline
     print(f"\n===== §Perf cell: {arch} × {shape} =====")
     results = []
     for variant, hypothesis in variants:
@@ -119,12 +131,37 @@ def iterate_cell(arch, shape, variants, multi_pod=False):
     return results
 
 
+def smoke_cell():
+    """CI smoke: the fast LM-decode serving sweep in a subprocess, its
+    JSON consolidated into artifacts/perf/smoke.json (uploaded as a
+    workflow artifact so the bench trajectory is tracked per commit)."""
+    import subprocess
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    print("===== §Perf smoke: LM decode serving (measured) =====")
+    lm_json = os.path.join(OUT, "serving_lm.json")
+    if os.path.exists(lm_json):
+        # a stale artifact from a previous run must not masquerade as
+        # this run's numbers if the subprocess dies before writing
+        os.remove(lm_json)
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_lm", "--smoke"],
+        env=env)
+    os.makedirs(OUT, exist_ok=True)
+    summary = {"ok": r.returncode == 0}
+    if os.path.exists(lm_json):
+        with open(lm_json) as f:
+            summary["serving_lm"] = json.load(f)
+    with open(os.path.join(OUT, "smoke.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"smoke summary -> {os.path.join(OUT, 'smoke.json')}")
+    return r.returncode
+
+
 def serving_cell():
     """§Perf serving cells: the measured (not dry-run) serving
     benchmarks.  Each runs in a subprocess so its device flags don't
     collide with this process's 512 fake devices."""
     import subprocess
-    import sys
     print("\n===== §Perf cell: sharded serving (measured) =====")
     print("    hypothesis: eager serving syncs the host per request "
           "(np outputs + eager routing/telemetry dispatch); one donated-"
@@ -144,16 +181,29 @@ def serving_cell():
     env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
     r2 = subprocess.run(
         [sys.executable, "-m", "benchmarks.serving_async"], env=env)
-    return r1.returncode or r2.returncode
+    print("\n===== §Perf cell: sharded LM decode session (measured) =====")
+    print("    hypothesis: eager LM decode dispatches every stage piece "
+          "(gather, layers, exit head, gate, propagate, scatter) as "
+          "separate host-driven ops per token; ONE fused donated-cache "
+          "compiled step per (stage, bucket) plus request consolidation "
+          "through the session should lift tokens/s >=1.5x at equal p95")
+    r3 = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_lm"], env=env)
+    return r1.returncode or r2.returncode or r3.returncode
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", type=int, default=None)
     ap.add_argument("--serving", action="store_true",
-                    help="run the measured sharded-serving benchmark "
+                    help="run the measured serving benchmarks "
                          "instead of the dry-run cells")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: fast LM serving sweep, JSON to "
+                         "artifacts/perf/smoke.json")
     args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke_cell())
     if args.serving:
         raise SystemExit(serving_cell())
     plan = PLAN if args.cell is None else [PLAN[args.cell]]

@@ -2,7 +2,10 @@
 REAL per-token layer skipping + CALM state propagation (DESIGN.md §3),
 through the queue-backed session handle over the ``repro.engine`` LM
 decode engine: concurrent callers submit prompts with deadlines and the
-scheduler consolidates them into shared bucketed decode loops.
+scheduler consolidates them into shared bucketed decode loops — each
+consolidated bucket running the SHARDED jit-end-to-end decode step (one
+donated-cache compiled program per (stage, bucket); the eager per-stage
+oracle is one ``mode="eager"`` away).
 
 Run:  PYTHONPATH=src python examples/lm_early_exit.py
 """
@@ -12,6 +15,7 @@ import jax.numpy as jnp
 from repro.core.routing import DartParams
 from repro.data.datasets import DatasetConfig, make_batch
 from repro.engine import LMDecodeEngine
+from repro.launch.mesh import make_serving_mesh
 from repro.models.transformer_lm import LMConfig
 from repro.runtime.trainer import Trainer, TrainConfig
 
@@ -30,10 +34,15 @@ def main():
 
     dart = DartParams(tau=jnp.asarray([0.35, 0.4]), coef=jnp.ones(2),
                       beta_diff=0.15)
-    srv = LMDecodeEngine(CFG, tr.params, dart)
+    srv = LMDecodeEngine(CFG, tr.params, dart, mesh=make_serving_mesh())
 
     prompts, _ = make_batch(DATA, range(8), kind="tokens", seq_len=17,
                             vocab=CFG.vocab)
+    # sanity: the fused compiled decode loop is bit-identical to the
+    # eager per-stage oracle (tokens AND exit depths)
+    chk_s = srv.generate(prompts[:2, :9], n_new=4)
+    chk_e = srv.generate(prompts[:2, :9], n_new=4, mode="eager")
+    assert all(np.array_equal(a, b) for a, b in zip(chk_s, chk_e))
     # Queue-backed session: 8 concurrent "callers" each submit one
     # prompt; the scheduler lanes them by (prompt_len, n_new) and all
     # eight share ONE bucketed early-exit decode loop.

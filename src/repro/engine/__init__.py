@@ -25,7 +25,10 @@ Pieces:
 * :class:`BatchCompactor` — bucket-padded batch compaction shared by the
   staged classifier path and the LM decode engine (compactor.py)
 * :class:`LMDecodeEngine` — early-exit autoregressive decoding with
-  CALM-style KV propagation (lm.py)
+  CALM-style KV propagation (lm.py).  Pass ``mesh=make_serving_mesh()``
+  for the jit-end-to-end sharded decode loop (one donated-cache
+  compiled step per (stage, bucket)); the eager per-stage path stays
+  available as the oracle (``generate(..., mode="eager")``)
 * :class:`ShardedDartEngine` — jit-end-to-end, data-parallel serving
   over a device mesh: donated-state compiled step, per-bucket compile
   caches, replicated policy + per-replica telemetry (sharded.py); reach
@@ -33,12 +36,11 @@ Pieces:
 
 One layer up, :mod:`repro.serving` turns an engine into an async server
 (``AsyncDartServer(engine).submit(x, deadline_ms) -> Future``) with
-difficulty-aware admission and SLO-driven batch consolidation.
+difficulty-aware admission and SLO-driven batch consolidation;
+``LMDecodeEngine.session()`` is the same machinery for decode requests.
 
-Legacy entry points (``repro.runtime.server.DartServer``,
-``repro.runtime.lm_server.LMDecodeServer``) remain importable as thin
-shims that delegate here; they emit ``DeprecationWarning`` and are
-removed in PR 4.
+(The legacy ``repro.runtime.server`` / ``repro.runtime.lm_server``
+shims were removed in PR 4; import from here instead.)
 """
 from repro.engine import registry
 from repro.engine.compactor import BatchCompactor, BatchTooLarge

@@ -470,20 +470,9 @@ class DartEngine:
         return CK.save(path, step, self.state)
 
     def restore_state(self, path: str, step: int | None = None):
-        from repro import checkpoint as CK
-        try:
-            restored, step, _ = CK.restore(path, self.state, step)
-        except ValueError as e:
-            if "leaf count" not in str(e):
-                raise
-            # Pre-latency-telemetry checkpoint: its leaves are a strict
-            # prefix of the current flatten order (state.LEGACY_FIELDS)
-            # — restore those and keep fresh latency counters.
-            legacy = [getattr(self.state, f) for f in ST.LEGACY_FIELDS]
-            leaves, step, _ = CK.restore(path, legacy, step)
-            restored = dataclasses.replace(
-                self.state, **dict(zip(ST.LEGACY_FIELDS, leaves)))
-        self.state = restored
+        # Pre-latency-telemetry checkpoints restore through the shared
+        # prefix migration (state.LEGACY_FIELDS).
+        self.state, step = ST.restore_with_migration(path, self.state, step)
         return step
 
     # ------------------------------------------------------------------

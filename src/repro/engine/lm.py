@@ -1,89 +1,173 @@
 """LM decode engine — early-exit autoregressive serving on the DART gate.
 
-The LM analogue of :class:`repro.engine.DartEngine`'s compacted mode
-(re-homed from ``repro.runtime.lm_server``, now built on the shared
-:class:`BatchCompactor`): per decode step the layer stack runs
-stage-by-stage; exited samples *skip* the remaining stages — their KV
-entries are filled by CALM-style state propagation
-(``lm_kv_propagate``) — and survivors (plus their cache rows) are
-compacted into power-of-two buckets.
+The LM analogue of :class:`repro.engine.DartEngine` (re-homed from the
+long-deleted ``repro.runtime.lm_server``, built on the shared
+:class:`BatchCompactor` and :class:`EngineState`): per decode step the
+layer stack runs stage-by-stage; exited samples *skip* the remaining
+stages — their KV entries are filled by CALM-style state propagation —
+and survivors (plus their cache rows) are compacted into power-of-two
+buckets.
+
+Two execution paths serve bit-identical decisions (ISSUE 4 tentpole):
+
+* ``mode="eager"`` — the reference oracle: each stage dispatches its
+  pieces (stage layers, exit head, gate, KV propagation, cache
+  scatter) as separate ops from Python.
+* ``mode="sharded"`` — constructed with ``mesh=make_serving_mesh()``:
+  ONE donated-cache jitted program per ``(stage, bucket)`` fusing the
+  stage forward, per-token confidence, the Eq. 8 decode-time difficulty
+  EMA (embed step), Eq. 19 / Alg. 1 stage-threshold routing, CALM KV
+  propagation for the exited rows AND the telemetry fold.  The KV
+  cache, the hidden-state buffer and the :class:`EngineState` live as
+  ``NamedSharding``-annotated donated pytrees (batch rows sharded over
+  the ``("data",)`` mesh, policy replicated, telemetry per replica), so
+  a decode step never reallocates the cache and never round-trips state
+  through the host.  Compile caches are keyed by ``engine.bucket_key``
+  — the same ``BatchCompactor`` bucket ∘ replica-multiple key the image
+  engines and the async scheduler share.
 
 The exit gate uses the ``lm-token`` confidence functional and the
 ``token_difficulty_ema`` decode-time difficulty estimator from the
-engine registries.
+engine registries.  Like the sharded classifier engine, the compiled
+path never uses the Pallas kernels (``pallas_call`` does not partition
+under GSPMD on the host platform).
+
+MoE caveat: capacity-based expert dispatch makes a token's output
+depend on which other tokens share its batch, so for MoE configs the
+bucket-padded sharded path is not bit-identical to eager survivor
+compaction; the oracle guarantee covers dense configs.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import adaptive as AD
 from repro.core import difficulty as DIFF
 from repro.core import thresholds as TH
 from repro.core.routing import DartParams
 from repro.engine import registry as REG
+from repro.engine import state as ST
 from repro.engine.compactor import BatchCompactor
+from repro.engine.state import EngineState
 from repro.models import layers as L
 from repro.models import transformer_lm as TLM
 
 
-def _stages(cfg: TLM.LMConfig):
+def _stages(cfg):
     """[(start, end)) layer ranges; stage k ends at exit_layers[k]."""
     bounds = [0] + [e + 1 for e in sorted(cfg.exit_layers)] + [cfg.n_layers]
     return [(a, b) for a, b in zip(bounds[:-1], bounds[1:])]
 
 
+def _stage_apply(params, x, cache_sl, cache_index, *, cfg, a, b):
+    """Run layers [a, b) of the stack for one decode position.
+
+    x: (B', 1, D); cache_sl: per-layer cache rows for exactly these
+    layers.  Shared verbatim by the eager per-stage path and the fused
+    sharded step, so both compute identical values row for row."""
+    cos, sin = L.rope_freqs(
+        cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
+        cache_sl[0]["c_kv"].shape[1] if cfg.attn_kind == "mla"
+        else cache_sl[0]["k"].shape[1], cfg.rope_theta)
+    new_sl = []
+    for j, i in enumerate(range(a, b)):
+        p = params["layers"][i]
+        h = L.rmsnorm(p["attn_norm"], x)
+        if cfg.attn_kind == "mla":
+            att, c = L.mla_decode(p["attn"], h, cos, sin,
+                                  cache_sl[j], cache_index)
+        else:
+            att, c = L.gqa_decode(p["attn"], h, cos, sin,
+                                  cache_sl[j], cache_index)
+        new_sl.append(c)
+        x = x + att
+        h2 = L.rmsnorm(p["ffn_norm"], x)
+        if cfg.layer_is_moe(i):
+            from repro.models.moe import moe_apply
+            f, _ = moe_apply(p["moe"], h2, cfg.moe, ep_mode=cfg.moe_ep_mode)
+        else:
+            f = L.swiglu(p["ffn"], h2)
+        x = x + f
+    return x, new_sl
+
+
 class LMDecodeEngine:
-    def __init__(self, cfg: TLM.LMConfig, params, dart: DartParams, *,
+    """Early-exit LM decoding behind the engine/session API.
+
+        engine = LMDecodeEngine(cfg, params, dart)            # eager
+        engine = LMDecodeEngine(cfg, params, dart,
+                                mesh=make_serving_mesh())      # sharded
+        tokens, stages = engine.generate(prompts, n_new=16)
+        session = engine.session()      # queue-backed concurrent callers
+
+    ``generate`` defaults to the sharded jitted path when a mesh was
+    given and to the eager path otherwise; ``mode="eager"`` always runs
+    the oracle.  All policy + telemetry lives in ``engine.state`` (an
+    :class:`EngineState`), checkpointable via ``save_state`` /
+    ``restore_state`` exactly like the classifier engines.
+    """
+
+    def __init__(self, cfg, params, dart: DartParams, *,
                  buckets=(1, 2, 4, 8, 16, 32, 64, 128), use_kernel=False,
-                 confidence: str = "lm-token"):
+                 confidence: str = "lm-token", mesh=None,
+                 data_axis: str = "data"):
         assert not cfg.layer_scan
         self.cfg = cfg
         self.params = params
-        self.dart = dart
         self.compactor = BatchCompactor(buckets)
-        self.use_kernel = use_kernel
+        self.mesh = mesh
         self._conf_fn = REG.get_confidence(confidence)
         self.stages = _stages(cfg)
+        self.n_exits = len(self.stages)
         self.exit_names = [str(i) for i in sorted(cfg.exit_layers)] \
             + ["final"]
+        # cumulative layer fraction spent by a token exiting at stage s
+        self.cum_costs = np.asarray(
+            [b / cfg.n_layers for _, b in self.stages], np.float32)
         self.stats_exit = np.zeros(len(self.stages), np.int64)
         self.layers_run = 0
         self.layers_skipped = 0
+        self._steps: dict = {}        # cache key -> compiled callable
+        self.trace_counts: dict = {}  # cache key -> number of traces
+
+        acfg = AD.AdaptiveConfig(n_exits=self.n_exits,
+                                 n_classes=min(cfg.vocab, 64))
+        self.acfg = acfg
+        self.state = EngineState.create(self.n_exits, acfg, dart)
+
+        if mesh is not None:
+            from repro.engine.sharded import _silence_donation_warning
+            _silence_donation_warning()
+            use_kernel = False           # pallas doesn't partition
+            self.data_axis = data_axis
+            self.n_replicas = int(mesh.shape[data_axis])
+            self.replica_multiple = self.n_replicas
+            self._repl = NamedSharding(mesh, P())
+            self._row = NamedSharding(mesh, P(data_axis))
+            self.params = jax.device_put(self.params, self._repl)
+            # Donated steps would invalidate buffers the caller still
+            # holds (its DartParams, a sibling engine) — take ownership
+            # with a deep copy before placing the state.
+            owned = jax.tree.map(
+                lambda a: jnp.array(a, copy=True),
+                ST.shard_telemetry(self.state, self.n_replicas))
+            self._state_sh = ST.state_shardings(owned, self._repl,
+                                                self._row)
+            self.state = jax.device_put(owned, self._state_sh)
+        else:
+            self.n_replicas = 1
+            self.replica_multiple = 1
+        self.use_kernel = use_kernel
 
         cfgc = cfg
-
-        def stage_fn(params, x, cache_sl, cache_index, a, b):
-            cos, sin = L.rope_freqs(
-                cfgc.qk_rope_dim if cfgc.attn_kind == "mla" else cfgc.hd,
-                cache_sl[0]["c_kv"].shape[1] if cfgc.attn_kind == "mla"
-                else cache_sl[0]["k"].shape[1], cfgc.rope_theta)
-            new_sl = []
-            for j, i in enumerate(range(a, b)):
-                p = params["layers"][i]
-                h = L.rmsnorm(p["attn_norm"], x)
-                if cfgc.attn_kind == "mla":
-                    att, c = L.mla_decode(p["attn"], h, cos, sin,
-                                          cache_sl[j], cache_index)
-                else:
-                    att, c = L.gqa_decode(p["attn"], h, cos, sin,
-                                          cache_sl[j], cache_index)
-                new_sl.append(c)
-                x = x + att
-                h2 = L.rmsnorm(p["ffn_norm"], x)
-                if cfgc.layer_is_moe(i):
-                    from repro.models.moe import moe_apply
-                    f, _ = moe_apply(p["moe"], h2, cfgc.moe,
-                                     ep_mode=cfgc.moe_ep_mode)
-                else:
-                    f = L.swiglu(p["ffn"], h2)
-                x = x + f
-            return x, new_sl
-
         self._stage_fns = [
-            jax.jit(partial(stage_fn, a=a, b=b), static_argnames=())
+            jax.jit(partial(_stage_apply, cfg=cfgc, a=a, b=b))
             for a, b in self.stages]
         self._exit_logits = [
             jax.jit(partial(lambda params, h, name: TLM.exit_logits(
@@ -97,6 +181,19 @@ class LMDecodeEngine:
             params["embed"], t).astype(cfgc.compute_dtype))
 
     # ------------------------------------------------------------------
+    @property
+    def dart(self) -> DartParams:
+        """The routing-parameter view (reads the live EngineState)."""
+        return self.state.dart
+
+    def bucket_key(self, n: int) -> int:
+        """THE compile-cache key for an ``n``-row decode bucket: the
+        ``BatchCompactor`` bucket rounded up to a replica multiple —
+        the same keying the image engines and the async scheduler
+        use, so every serving path agrees on what shares a compiled
+        shape."""
+        return self.compactor.padded_size(n, self.replica_multiple)
+
     def session(self, cfg=None, **kw):
         """Queue-backed session handle: drive this decode engine through
         the async scheduler (deadlines, priorities, consolidation of
@@ -106,6 +203,66 @@ class LMDecodeEngine:
         return LMDecodeSession(self, cfg=cfg, **kw)
 
     # ------------------------------------------------------------------
+    # state round-trip (same machinery as DartEngine)
+    # ------------------------------------------------------------------
+    def save_state(self, path: str, step: int = 0):
+        from repro import checkpoint as CK
+        return CK.save(path, step, self.state)
+
+    def restore_state(self, path: str, step: int | None = None):
+        self.state, step = ST.restore_with_migration(path, self.state, step)
+        if self.mesh is not None:
+            self._commit()
+        return step
+
+    def _commit(self):
+        self.state = jax.device_put(self.state, self._state_sh)
+
+    def stats(self) -> dict:
+        """Decode telemetry: per-stage exit counts, tokens served, mean
+        layer fraction spent (counters reduced over replicas when
+        sharded)."""
+        if self.mesh is not None:
+            tel = {k: np.asarray(v) for k, v in
+                   ST.reduce_telemetry(self.state).items()}
+        else:
+            tel = {f: np.asarray(getattr(self.state, f))
+                   for f in ST.TELEMETRY_FIELDS}
+        served = int(tel["served"])
+        counts = tel["exit_counts"]
+        out = {"served": served,
+               "exit_counts": counts,
+               "exit_frac": counts / max(served, 1),
+               "total_macs": float(tel["total_macs"]),
+               "mean_macs": float(tel["total_macs"]) / max(served, 1),
+               "layers_run": self.layers_run,
+               "layers_skipped": self.layers_skipped,
+               "replicas": self.n_replicas}
+        req = ST.request_stats(self.state)
+        if req["requests"]:
+            out["requests"] = req
+        return out
+
+    def record_requests(self, latencies_ms, missed=None) -> None:
+        """Fold completed-request latency/deadline telemetry into the
+        engine state (host-side write; the LM session calls this once
+        per flushed decode bucket)."""
+        self.state = ST.record_requests(self.state, latencies_ms, missed)
+        if self.mesh is not None:
+            s = self.state
+            self.state = dataclasses.replace(
+                s, lat_ms=jax.device_put(s.lat_ms, self._repl),
+                lat_ptr=jax.device_put(s.lat_ptr, self._repl),
+                lat_count=jax.device_put(s.lat_count, self._repl),
+                deadline_miss=jax.device_put(s.deadline_miss, self._repl))
+
+    def _count_trace(self, key):
+        # Runs in the Python body of a step function, i.e. once per trace.
+        self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+
+    # ------------------------------------------------------------------
+    # eager path (the oracle)
+    # ------------------------------------------------------------------
     def init_cache(self, batch, max_len):
         return TLM.lm_init_cache(self.cfg, batch, max_len)
 
@@ -114,15 +271,26 @@ class LMDecodeEngine:
                                   self.cfg, cache)
         return cache
 
-    def decode_step(self, tokens, cache, cache_index, alpha):
+    def decode_step(self, tokens, cache, cache_index, alpha, *,
+                    record: bool | None = None):
         """tokens: (B,) int; cache: full-depth list; alpha: (B,) difficulty.
-        Returns (next_token (B,), exit_stage (B,), new_cache, new_alpha)."""
+        Returns (next_token (B,), exit_stage (B,), new_cache, new_alpha).
+
+        ``record``: fold the step into ``state`` telemetry AND the host
+        diagnostics (stats_exit / layers_run / layers_skipped).
+        Defaults on for a pure-eager engine and OFF on a sharded one —
+        there the eager path is the oracle, and a host-side fold would
+        both pollute serving telemetry and broadcast scalar adds over
+        the state's leading replica axis."""
+        if record is None:
+            record = self.mesh is None
         b = tokens.shape[0]
         x_full = self._embed(self.params, jnp.asarray(tokens)[:, None])
         alpha = np.asarray(DIFF.token_difficulty_ema(jnp.asarray(alpha),
                                                      x_full))
-        tau = np.asarray(self.dart.tau, np.float32)
-        coef = np.asarray(self.dart.coef, np.float32)
+        tau = np.asarray(self.state.tau, np.float32)
+        coef = np.asarray(self.state.coef, np.float32)
+        beta_diff = float(self.state.beta_diff)
 
         out_tok = np.zeros(b, np.int64)
         out_stage = np.zeros(b, np.int64)
@@ -149,7 +317,8 @@ class LMDecodeEngine:
                 cache[i] = jax.tree.map(
                     lambda full, sl: full.at[act].set(sl[:n]),
                     cache[i], new_sl[j])
-            self.layers_run += (bnd - a) * n
+            if record:
+                self.layers_run += (bnd - a) * n
 
             logits = self._exit_logits[s](self.params, x_new[:n, 0])
             conf = self._conf_fn(logits, use_kernel=self.use_kernel)
@@ -158,14 +327,15 @@ class LMDecodeEngine:
 
             if s < n_stages - 1:
                 eff = np.asarray(TH.stage_threshold(
-                    tau[s], coef[s], alpha[active], self.dart.beta_diff))
+                    tau[s], coef[s], alpha[active], beta_diff))
                 fire = conf > eff
             else:
                 fire = np.ones(n, bool)
             done = active[fire]
             out_tok[done] = pred[fire]
             out_stage[done] = s
-            self.stats_exit[s] += int(fire.sum())
+            if record:
+                self.stats_exit[s] += int(fire.sum())
 
             if s < n_stages - 1 and fire.any():
                 # CALM state propagation for the exited rows
@@ -179,28 +349,200 @@ class LMDecodeEngine:
                     cache[i] = jax.tree.map(
                         lambda full, sl: full.at[jnp.asarray(done)].set(sl),
                         cache[i], sub[i])
-                self.layers_skipped += \
-                    (self.cfg.n_layers - bnd) * int(fire.sum())
+                if record:
+                    self.layers_skipped += \
+                        (self.cfg.n_layers - bnd) * int(fire.sum())
             keep = ~fire
             if not keep.any():
                 break
             x = x_new[:n][jnp.asarray(np.nonzero(keep)[0])]
             active = active[keep]
+        if record:
+            self._record_host(out_stage)
         return out_tok, out_stage, cache, alpha
 
+    def _record_host(self, out_stage) -> None:
+        """Eager-path telemetry fold (numpy, one decode step)."""
+        s = self.state
+        b = len(out_stage)
+        counts = np.bincount(out_stage, minlength=self.n_exits)
+        self.state = dataclasses.replace(
+            s, served=s.served + jnp.asarray(b, jnp.int32),
+            exit_counts=s.exit_counts + jnp.asarray(counts, jnp.int32),
+            total_macs=s.total_macs + float(np.sum(
+                self.cum_costs[out_stage])),
+            since_update=s.since_update + jnp.asarray(b, jnp.int32))
+
+    # ------------------------------------------------------------------
+    # sharded path: fused per-(stage, bucket) donated-cache steps
+    # ------------------------------------------------------------------
+    def _embed_step(self, bp: int):
+        """Fused embed + Eq. 8 decode-time difficulty EMA for a
+        ``bp``-row bucket (the per-decode-step prologue)."""
+        key = ("lm-embed", bp)
+        if key in self._steps:
+            return self._steps[key]
+        cfg = self.cfg
+
+        def step(params, toks, alpha):
+            self._count_trace(key)
+            x_full = L.embed(params["embed"],
+                             toks[:, None]).astype(cfg.compute_dtype)
+            alpha = DIFF.token_difficulty_ema(alpha, x_full)
+            return x_full, alpha
+
+        self._steps[key] = jax.jit(step, donate_argnums=(2,),
+                                   out_shardings=self._row)
+        return self._steps[key]
+
+    def _prefill_step(self, bp: int, plen: int, max_len: int):
+        key = ("lm-prefill", bp, plen, max_len)
+        if key in self._steps:
+            return self._steps[key]
+        cfg = self.cfg
+
+        def step(params, tokens, cache):
+            self._count_trace(key)
+            cache, _ = TLM.lm_prefill(params, tokens, cfg, cache)
+            return cache
+
+        self._steps[key] = jax.jit(step, donate_argnums=(2,),
+                                   out_shardings=self._row)
+        return self._steps[key]
+
+    def _stage_step(self, s: int, sp: int, bp: int, max_len: int):
+        """ONE compiled decode step for (stage ``s``, survivor bucket
+        ``sp``) over a ``bp``-row generate bucket: cache-row gather,
+        stage forward, exit head + confidence, Eq. 19 threshold + Alg. 1
+        gate, token/stage scatter, CALM KV propagation for the fired
+        rows, telemetry fold.  The cache, hidden buffer, token buffers
+        and EngineState are donated, so repeated steps re-use their
+        buffers (no realloc)."""
+        key = ("lm-stage", s, sp, bp, max_len)
+        if key in self._steps:
+            return self._steps[key]
+        a, bnd = self.stages[s]
+        cfg = self.cfg
+        final = s == len(self.stages) - 1
+        exit_name = self.exit_names[s]
+
+        def step(params, state, cache, x_full, toks, stg, idx, valid,
+                 alpha, cache_index):
+            self._count_trace(key)
+            # gather the survivors' rows; padded lanes (idx == bp) clip
+            # to the last (padding) row and are masked by ``valid``
+            x = jnp.take(x_full, idx, axis=0, mode="clip")
+            cache_sl = [jax.tree.map(
+                lambda c: jnp.take(c, idx, axis=0, mode="clip"), cache[i])
+                for i in range(a, bnd)]
+            x_new, new_sl = _stage_apply(params, x, cache_sl, cache_index,
+                                         cfg=cfg, a=a, b=bnd)
+            cache = list(cache)
+            for j, i in enumerate(range(a, bnd)):
+                cache[i] = jax.tree.map(
+                    lambda full, sl: full.at[idx].set(sl, mode="drop"),
+                    cache[i], new_sl[j])
+            x_full = x_full.at[idx].set(x_new, mode="drop")
+
+            logits = TLM.exit_logits(params, cfg, x_new[:, 0], exit_name)
+            conf = self._conf_fn(logits)
+            pred = jnp.argmax(logits, -1)
+            vb = valid > 0
+            if final:
+                fire = vb                       # Alg. 1 line 12
+            else:
+                al = jnp.take(alpha, idx, mode="clip")
+                eff = TH.stage_threshold(state.tau[s], state.coef[s], al,
+                                         state.beta_diff)
+                fire = (conf > eff) & vb
+            idx_fire = jnp.where(fire, idx, bp)  # non-fired -> dropped
+            toks = toks.at[idx_fire].set(pred.astype(toks.dtype),
+                                         mode="drop")
+            stg = stg.at[idx_fire].set(s, mode="drop")
+            if not final:
+                cache = self._propagate_traced(params, cache, x_new[:, 0],
+                                               idx_fire, cache_index, bnd)
+            state = self._fold_decode(state, s, fire)
+            return state, (cache, x_full, toks, stg, fire)
+
+        self._steps[key] = jax.jit(
+            step, donate_argnums=(1, 2, 3, 4, 5),
+            out_shardings=(self._state_sh, self._row))
+        return self._steps[key]
+
+    def _propagate_traced(self, params, cache, h_exit, idx_fire,
+                          cache_index, from_layer):
+        """CALM propagation inside the fused step: the SAME projection
+        math as the eager path (``transformer_lm.lm_kv_project`` is the
+        one implementation both share), scattered straight into rows
+        ``[idx_fire, cache_index]`` of the full donated cache
+        (non-fired rows carry the out-of-bounds index and are
+        dropped)."""
+        cfg = self.cfg
+        rows = TLM.lm_kv_project(params, h_exit, cfg, cache, cache_index,
+                                 from_layer)
+        cache = list(cache)
+        for i, r in zip(range(from_layer, cfg.n_layers), rows):
+            c = dict(cache[i])
+            for name, val in r.items():
+                c[name] = c[name].at[idx_fire, cache_index].set(
+                    val[:, 0].astype(c[name].dtype), mode="drop")
+            cache[i] = c
+        return cache
+
+    def _fold_decode(self, state: EngineState, s: int, fire) -> EngineState:
+        """Per-replica telemetry fold for one (stage, bucket) step: each
+        replica's segment of the padded bucket lands in its own
+        counters (``stats()`` reduces across replicas)."""
+        r = self.n_replicas
+        per = fire.shape[0] // r
+        f = fire.astype(jnp.float32).reshape(r, per)
+        n_new = f.sum(1).astype(jnp.int32)
+        return dataclasses.replace(
+            state,
+            served=state.served + n_new,
+            exit_counts=state.exit_counts.at[:, s].add(n_new),
+            total_macs=state.total_macs
+            + n_new.astype(jnp.float32) * float(self.cum_costs[s]),
+            since_update=state.since_update + n_new)
+
+    # ------------------------------------------------------------------
+    # generation
+    # ------------------------------------------------------------------
     def generate(self, prompt_tokens: np.ndarray, n_new: int,
-                 max_len: int | None = None):
+                 max_len: int | None = None, mode: str | None = None):
         """prompt_tokens: (B, S0).  Greedy generation with early exits.
+        Returns (tokens (B, n_new), exit stages (B, n_new)).
+
+        mode — "sharded" (default when built with ``mesh=``): the fused
+        donated-cache compiled decode loop; "eager": the per-stage
+        oracle path (never records telemetry on a sharded engine).
         Batches larger than the biggest bucket are split into chunks
         (each chunk gets its own KV cache)."""
+        if mode is None:
+            mode = "sharded" if self.mesh is not None else "eager"
+        if mode not in ("sharded", "eager"):
+            raise ValueError(
+                f"unknown mode {mode!r}; known: sharded, eager")
+        if mode == "sharded" and self.mesh is None:
+            raise ValueError(
+                "mode='sharded' needs a mesh — construct with "
+                "LMDecodeEngine(..., mesh=make_serving_mesh())")
         b, s0 = prompt_tokens.shape
         if b > self.compactor.max_bucket:
             outs, stgs = [], []
             for a, z in self.compactor.chunks(b):
-                o, st = self.generate(prompt_tokens[a:z], n_new, max_len)
+                o, st = self.generate(prompt_tokens[a:z], n_new, max_len,
+                                      mode=mode)
                 outs.append(o)
                 stgs.append(st)
             return np.concatenate(outs), np.concatenate(stgs)
+        if mode == "sharded":
+            return self._generate_sharded(prompt_tokens, n_new, max_len)
+        return self._generate_eager(prompt_tokens, n_new, max_len)
+
+    def _generate_eager(self, prompt_tokens, n_new, max_len=None):
+        b, s0 = prompt_tokens.shape
         max_len = max_len or (s0 + n_new + 1)
         cache = self.init_cache(b, max_len)
         cache = self.prefill(prompt_tokens[:, :-1], cache)
@@ -209,8 +551,58 @@ class LMDecodeEngine:
         out = []
         stages = []
         for t in range(n_new):
+            # decode_step's default record already disables the fold on
+            # a sharded engine (the eager path is the oracle there)
             toks, stage, cache, alpha = self.decode_step(
                 toks, cache, s0 - 1 + t, alpha)
             out.append(toks.copy())
             stages.append(stage.copy())
         return np.stack(out, 1), np.stack(stages, 1)
+
+    def _generate_sharded(self, prompt_tokens, n_new, max_len=None):
+        cfg = self.cfg
+        prompts = np.asarray(prompt_tokens)
+        b, s0 = prompts.shape
+        bp = self.bucket_key(b)
+        max_len = max_len or (s0 + n_new + 1)
+        cache = jax.device_put(self.init_cache(bp, max_len), self._row)
+        pad = self.compactor.pad(prompts.astype(np.int64), bp)
+        if s0 > 1:
+            cache = self._prefill_step(bp, s0 - 1, max_len)(
+                self.params, jnp.asarray(pad[:, :-1]), cache)
+        alpha = jax.device_put(jnp.full((bp,), 0.5, jnp.float32),
+                               self._row)
+        toks = jax.device_put(jnp.asarray(pad[:, -1], jnp.int32),
+                              self._row)
+        stg = jax.device_put(jnp.zeros((bp,), jnp.int32), self._row)
+        n_layers = cfg.n_layers
+        out, stages_out = [], []
+        for t in range(n_new):
+            ci = s0 - 1 + t
+            x_full, alpha = self._embed_step(bp)(self.params, toks, alpha)
+            active = np.arange(b)
+            for s, (a, bnd) in enumerate(self.stages):
+                n = active.size
+                sp = self.bucket_key(n)
+                idx = np.full(sp, bp, np.int32)
+                idx[:n] = active
+                valid = np.zeros(sp, np.float32)
+                valid[:n] = 1.0
+                self.state, (cache, x_full, toks, stg, fire) = \
+                    self._stage_step(s, sp, bp, max_len)(
+                        self.params, self.state, cache, x_full, toks, stg,
+                        jnp.asarray(idx), jnp.asarray(valid), alpha, ci)
+                # the ONE host sync per stage: survivors are
+                # data-dependent shapes
+                fire_np = np.asarray(fire)[:n]
+                nf = int(fire_np.sum())
+                self.layers_run += (bnd - a) * n
+                self.stats_exit[s] += nf
+                if s < len(self.stages) - 1:
+                    self.layers_skipped += (n_layers - bnd) * nf
+                active = active[~fire_np]
+                if active.size == 0:
+                    break
+            out.append(np.asarray(toks)[:b].astype(np.int64))
+            stages_out.append(np.asarray(stg)[:b].astype(np.int64))
+        return np.stack(out, 1), np.stack(stages_out, 1)

@@ -113,18 +113,7 @@ class ShardedDartEngine(DartEngine):
     def _state_shardings(self) -> EngineState:
         """EngineState-of-NamedShardings: policy replicated, telemetry
         row-sharded on its leading replica axis."""
-        bufs, shared = ST.split_adaptive(self.state.adaptive)
-        return EngineState(
-            tau=self._repl, coef=self._repl, beta_diff=self._repl,
-            beta_opt=self._repl,
-            adaptive={**{k: self._repl for k in shared},
-                      **{k: self._row for k in bufs}},
-            served=self._row, exit_counts=self._row,
-            total_macs=self._row, since_update=self._row,
-            # per-request latency telemetry: host-written, one global
-            # window per engine (no replica axis)
-            lat_ms=self._repl, lat_ptr=self._repl,
-            lat_count=self._repl, deadline_miss=self._repl)
+        return ST.state_shardings(self.state, self._repl, self._row)
 
     def _commit(self):
         """Re-pin the state to its sharding layout after any eager

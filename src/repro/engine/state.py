@@ -229,6 +229,43 @@ def shard_telemetry(state: EngineState, n_replicas: int) -> EngineState:
         **{f: lead(getattr(state, f)) for f in TELEMETRY_FIELDS})
 
 
+def state_shardings(state: EngineState, repl, row) -> EngineState:
+    """EngineState-of-NamedShardings for a telemetry-sharded state:
+    policy leaves get ``repl`` (replicated), telemetry leaves (counters +
+    the §II.C ring buffers, already carrying their leading replica axis
+    from :func:`shard_telemetry`) get ``row`` (sharded over the data
+    axis).  The one layout shared by every sharded engine
+    (``ShardedDartEngine``, the sharded LM decode path)."""
+    bufs, shared = split_adaptive(state.adaptive)
+    return EngineState(
+        tau=repl, coef=repl, beta_diff=repl, beta_opt=repl,
+        adaptive={**{k: repl for k in shared}, **{k: row for k in bufs}},
+        served=row, exit_counts=row, total_macs=row, since_update=row,
+        # per-request latency telemetry: host-written, one global window
+        # per engine (no replica axis)
+        lat_ms=repl, lat_ptr=repl, lat_count=repl, deadline_miss=repl)
+
+
+def restore_with_migration(path: str, template: EngineState,
+                           step: int | None = None):
+    """``checkpoint.restore`` with legacy-layout migration: a checkpoint
+    whose leaves are a strict prefix of the current flatten order (the
+    pre-latency-telemetry ``LEGACY_FIELDS`` era) restores those fields
+    and keeps the template's fresh values for the rest.  Returns
+    ``(state, step)``.  Shared by every engine's ``restore_state``."""
+    from repro import checkpoint as CK
+    try:
+        restored, step, _ = CK.restore(path, template, step)
+        return restored, step
+    except ValueError as e:
+        if "leaf count" not in str(e):
+            raise
+    legacy = [getattr(template, f) for f in LEGACY_FIELDS]
+    leaves, step, _ = CK.restore(path, legacy, step)
+    return dataclasses.replace(
+        template, **dict(zip(LEGACY_FIELDS, leaves))), step
+
+
 def reduce_telemetry(state: EngineState) -> dict:
     """Cross-replica all-reduce of the counter fields -> global totals."""
     return {f: jnp.sum(getattr(state, f), axis=0) for f in TELEMETRY_FIELDS}

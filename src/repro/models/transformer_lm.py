@@ -605,20 +605,22 @@ def lm_decode_step(params, token_ids, cache, cache_index, cfg: LMConfig, *,
     return exit_h, new_cache
 
 
-def lm_kv_propagate(params, h_exit, cfg: LMConfig, cache, cache_index,
-                    from_layer: int):
-    """CALM-style state propagation: after a sample exits at ``from_layer``,
-    fill the deeper layers' KV caches from the (frozen) exit hidden state so
-    that future tokens can attend to this position.  Only the KV projections
-    run — this is the cheap path that makes true layer-skipping sound."""
+def lm_kv_project(params, h_exit, cfg: LMConfig, cache, cache_index,
+                  from_layer: int):
+    """Per-layer KV projections of a frozen exit hidden state — the
+    CALM propagation math, shared by the eager :func:`lm_kv_propagate`
+    and the LM engine's fused sharded step (which scatters these rows
+    itself).  ``cache`` is only probed for ``max_len``; returns a list
+    over layers [from_layer, n_layers) of cache-leaf dicts shaped
+    (B', 1, ...)."""
     max_len = (cache[0]["c_kv"].shape[1] if cfg.attn_kind == "mla"
                else cache[0]["k"].shape[1])
     cos, sin = L.rope_freqs(
         cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
         max_len, cfg.rope_theta)
     positions = jnp.full((h_exit.shape[0], 1), cache_index, jnp.int32)
-    new_cache = list(cache)
     x = h_exit[:, None, :]
+    rows = []
     for i in range(from_layer, cfg.n_layers):
         p = params["layers"][i]
         hn = L.rmsnorm(p["attn_norm"], x)
@@ -628,21 +630,29 @@ def lm_kv_propagate(params, h_exit, cfg: LMConfig, cache, cache_index,
             c_kv = L.rmsnorm(p["attn"]["kv_norm"], kv[..., :kv_lora])
             k_rope = L.apply_rope(kv[..., kv_lora:][:, :, None, :], cos, sin,
                                   positions)[:, :, 0]
-            c = dict(cache[i])
-            c["c_kv"] = lax.dynamic_update_slice_in_dim(
-                c["c_kv"], c_kv.astype(c["c_kv"].dtype), cache_index, axis=1)
-            c["k_rope"] = lax.dynamic_update_slice_in_dim(
-                c["k_rope"], k_rope.astype(c["k_rope"].dtype), cache_index,
-                axis=1)
+            rows.append({"c_kv": c_kv, "k_rope": k_rope})
         else:
             k = jnp.einsum("bsd,dhk->bshk", hn, p["attn"]["wk"])
             v = jnp.einsum("bsd,dhk->bshk", hn, p["attn"]["wv"])
             k = L.apply_rope(k, cos, sin, positions)
-            c = dict(cache[i])
-            c["k"] = lax.dynamic_update_slice_in_dim(
-                c["k"], k.astype(c["k"].dtype), cache_index, axis=1)
-            c["v"] = lax.dynamic_update_slice_in_dim(
-                c["v"], v.astype(c["v"].dtype), cache_index, axis=1)
+            rows.append({"k": k, "v": v})
+    return rows
+
+
+def lm_kv_propagate(params, h_exit, cfg: LMConfig, cache, cache_index,
+                    from_layer: int):
+    """CALM-style state propagation: after a sample exits at ``from_layer``,
+    fill the deeper layers' KV caches from the (frozen) exit hidden state so
+    that future tokens can attend to this position.  Only the KV projections
+    run — this is the cheap path that makes true layer-skipping sound."""
+    rows = lm_kv_project(params, h_exit, cfg, cache, cache_index,
+                         from_layer)
+    new_cache = list(cache)
+    for i, r in zip(range(from_layer, cfg.n_layers), rows):
+        c = dict(cache[i])
+        for name, val in r.items():
+            c[name] = lax.dynamic_update_slice_in_dim(
+                c[name], val.astype(c[name].dtype), cache_index, axis=1)
         new_cache[i] = c
     return new_cache
 

@@ -27,7 +27,8 @@ Pieces:
 * :class:`RequestQueue` — lane-keyed backpressure queue (queue.py).
 * :class:`LMDecodeSession` — the same scheduling over
   ``LMDecodeEngine.generate`` (lm_session.py); reach it via
-  ``engine.session()``.
+  ``engine.session()``.  With a sharded LM engine, each consolidated
+  bucket runs the fused donated-cache compiled decode loop.
 
 Scheduling never changes routing under a fixed policy: every completed
 request's outputs are identical to serving it alone through

@@ -1,8 +1,7 @@
 """LMDecodeSession — queue-backed session handle over LMDecodeEngine.
 
 The API seam for driving early-exit LM decoding through the same
-scheduler machinery as classifier serving (ROADMAP: the full
-sharded-step port of LM decode builds on this):
+scheduler machinery as classifier serving:
 
     session = engine.session()                 # LMDecodeEngine.session
     fut = session.submit(prompt_tokens, n_new=16, deadline_ms=500)
@@ -11,13 +10,16 @@ sharded-step port of LM decode builds on this):
 Requests are laned by ``(prompt_len, n_new)`` — the two quantities that
 fix the compiled decode shapes — and consolidated into one
 ``generate`` call per flushed bucket, so N concurrent callers share one
-bucketed decode loop instead of N.  Deadlines, priorities, backpressure
-and the size-or-deadline flush policy behave exactly as in
+bucketed decode loop instead of N.  With a sharded engine
+(``LMDecodeEngine(..., mesh=make_serving_mesh())``) each consolidated
+bucket runs the fused donated-cache compiled decode loop; consolidation
+sizes are padded with ``engine.bucket_key`` so every size inside a
+bucket reuses one compiled program per stage.  Deadlines, priorities,
+backpressure and the size-or-deadline flush policy behave exactly as in
 :class:`~repro.serving.loop.AsyncDartServer`.
 """
 from __future__ import annotations
 
-from collections import deque
 from concurrent.futures import Future
 
 import numpy as np
@@ -29,8 +31,6 @@ from repro.serving.request import Request
 class LMDecodeSession(_BucketScheduler):
     def __init__(self, engine, cfg: SchedulerConfig | None = None, **kw):
         self.engine = engine
-        self._lat_ms: deque = deque(maxlen=2048)
-        self._miss = 0
         cfg = cfg or SchedulerConfig(max_batch=engine.compactor.max_bucket,
                                      policy="reject")
         super().__init__(cfg, **kw)
@@ -39,7 +39,9 @@ class LMDecodeSession(_BucketScheduler):
     def _bucket_key(self, n: int) -> int:
         if n > self.engine.compactor.max_bucket:
             return n            # oversized: generate() chunk-splits
-        return self.engine.compactor.bucket_for(n)
+        # the shared compile-cache key (bucket ∘ replica multiple), so
+        # the flush planner agrees with the engine's compiled shapes
+        return self.engine.bucket_key(n)
 
     def _max_batch_cap(self) -> int:
         return self.engine.compactor.max_bucket
@@ -64,28 +66,27 @@ class LMDecodeSession(_BucketScheduler):
         tokens, stages = self.engine.generate(prompts, n_new)
         now = self._clock()
         ends = np.cumsum([r.n for r in reqs])
+        lats, missed = [], []
         for r, a, z in zip(reqs, np.concatenate([[0], ends[:-1]]), ends):
             lat_ms = (now - r.t_submit) * 1e3
             miss = r.deadline_s is not None and now > r.deadline_s
-            self._lat_ms.append(lat_ms)
-            self._miss += bool(miss)
+            lats.append(lat_ms)
+            missed.append(miss)
             r.resolve({"tokens": tokens[a:z], "stages": stages[a:z],
                        "latency_ms": lat_ms, "deadline_missed": miss,
                        "lane": r.lane})
+        # latency/deadline telemetry folds into the EngineState — the
+        # ONE store behind both session.stats() and engine.stats()
+        # (and it checkpoints with the engine)
+        self.engine.record_requests(lats, missed)
         self.counters["completed"] += len(reqs)
 
     # -- metering -------------------------------------------------------
     def stats(self) -> dict:
-        n = self.counters["completed"]
-        out = {"scheduler": {**self.counters, "shed": self.queue.shed,
-                             "rejected": self.queue.rejected},
-               "requests": {"requests": n, "deadline_miss": self._miss,
-                            "miss_rate": self._miss / max(n, 1)},
-               "exit_hist": np.asarray(self.engine.stats_exit).tolist(),
-               "layers_run": self.engine.layers_run,
-               "layers_skipped": self.engine.layers_skipped}
-        if self._lat_ms:
-            from repro.engine.state import latency_percentiles
-            out["requests"]["latency_ms"] = \
-                latency_percentiles(self._lat_ms)
-        return out
+        from repro.engine.state import request_stats
+        return {"scheduler": {**self.counters, "shed": self.queue.shed,
+                              "rejected": self.queue.rejected},
+                "requests": request_stats(self.engine.state),
+                "exit_hist": np.asarray(self.engine.stats_exit).tolist(),
+                "layers_run": self.engine.layers_run,
+                "layers_skipped": self.engine.layers_skipped}

@@ -1,10 +1,10 @@
-"""Serving engine: compacted execution == masked Alg. 1 reference,
-adaptive updates, cost accounting — on the ``repro.engine`` API.
+"""Serving-engine compatibility: compacted execution == masked Alg. 1
+reference, adaptive updates, cost accounting — on the ``repro.engine``
+API.
 
-(The legacy ``DartServer``/``LMDecodeServer`` shims are down to ONE
-test here, asserting they still delegate and now emit
-``DeprecationWarning``; everything else runs on ``DartEngine`` so the
-planned PR-4 shim removal only deletes that test.)
+(Formerly tests/test_server.py.  The legacy ``DartServer`` /
+``LMDecodeServer`` shims this file once covered were removed in PR 4;
+every path here runs on ``DartEngine`` directly.)
 """
 import jax.numpy as jnp
 import numpy as np
@@ -197,32 +197,10 @@ def test_engine_works_for_vit():
     np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
 
 
-def test_legacy_shims_warn_and_delegate(trained_cnn):
-    """The PR-4 removal of runtime.server / runtime.lm_server must be a
-    pure delete: the shims emit DeprecationWarning and only delegate."""
-    mc, params = trained_cnn
-    from repro.runtime.server import DartServer
-    dart = DartParams(tau=jnp.full((2,), 0.35), coef=jnp.ones(2),
-                      beta_diff=0.3)
-    with pytest.warns(DeprecationWarning, match="DartServer is deprecated"):
-        srv = DartServer(mc, params, dart, cum_costs=[0.3, 0.7, 1.0],
-                         adapt=False)
-    x, _ = make_batch(DATA, range(8), split="eval")
-    out = srv.infer_batch(x)
-    ref = srv.engine.infer(x, mode="masked")
-    np.testing.assert_array_equal(out["exit_idx"],
-                                  np.asarray(ref["exit_idx"]))
-    assert srv.stats.served == 8
-
-    from repro.models.transformer_lm import LMConfig
-    from repro.runtime.lm_server import LMDecodeServer
-    from repro.runtime.trainer import Trainer, TrainConfig
-    lc = LMConfig(name="lm-shim", n_layers=2, d_model=16, n_heads=2,
-                  n_kv_heads=1, d_ff=32, vocab=16, exit_layers=(0,),
-                  max_seq=16, remat=False)
-    tr = Trainer(lc, TrainConfig(batch_size=4, steps=1, lr=1e-3),
-                 DatasetConfig(name="tokens", n_train=32),
-                 data_kind="tokens")
-    tr.run()
-    with pytest.warns(DeprecationWarning, match="LMDecodeServer"):
-        LMDecodeServer(lc, tr.params, dart)
+def test_legacy_shims_are_gone():
+    """PR 4 removed runtime.server / runtime.lm_server outright; the
+    import paths must stay dead so nothing silently resurrects them."""
+    with pytest.raises(ImportError):
+        import repro.runtime.server          # noqa: F401
+    with pytest.raises(ImportError):
+        import repro.runtime.lm_server       # noqa: F401

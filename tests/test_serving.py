@@ -237,6 +237,11 @@ def test_backpressure_reject_and_degrade(vit_engine_factory, eval_images):
 def test_latency_percentiles_match_recomputed_reference(vit_engine_factory,
                                                         eval_images):
     eng = vit_engine_factory()
+    # warm the compiled shapes the dispatcher will hit: this test
+    # asserts zero deadline misses at a 10s SLO, and on a throttled
+    # 2-core CI host a cold first-bucket compile can blow through that
+    for b in (2, 4, 8):
+        eng.infer(eval_images[:2], mode="masked", record=False, pad_to=b)
     with AsyncDartServer(eng, SchedulerConfig(max_batch=8,
                                               flush_ms=1.0)) as srv:
         futs = [srv.submit(eval_images[i:i + 2], deadline_ms=1e4)
