@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test smoke engine-test bench bench-serving bench-async bench-lm \
-    docs-check deps
+    bench-kernels perf-check docs-check deps
 
 # Tier-1 verify (ROADMAP): docs lint + the full test suite, fail-fast.
 test: docs-check
@@ -35,6 +35,17 @@ bench-async:
 # (>= 1.5x tokens/s at equal p95; JSON to artifacts/perf/).
 bench-lm:
 	$(PY) -m benchmarks.serving_lm
+
+# Fused-kernel microbenchmarks vs the composed XLA reference chains
+# (dispatch backends + the >=1.3x acceptance gate; JSON to
+# artifacts/bench/).
+bench-kernels:
+	$(PY) -m benchmarks.kernels_bench
+
+# Perf regression gate: run the smoke sweep, fail on >15% regression vs
+# benchmarks/baselines/smoke.json.
+perf-check:
+	$(PY) -m benchmarks.perf_iterate --check
 
 # Lint docs/ + README: compile python snippets, validate intra-repo links.
 docs-check:

@@ -7,11 +7,16 @@ together with the napkin-math hypothesis that motivated each change.
   PYTHONPATH=src python -m benchmarks.perf_iterate [--cell N]
   PYTHONPATH=src python -m benchmarks.perf_iterate --serving
   PYTHONPATH=src python -m benchmarks.perf_iterate --smoke
+  PYTHONPATH=src python -m benchmarks.perf_iterate --check
 
 ``--serving`` runs the measured serving benchmarks (sharded, async
 scheduler, LM decode) in subprocesses; ``--smoke`` is the CI variant:
 the fast LM-decode sweep only, with its JSON consolidated into
 ``artifacts/perf/smoke.json`` for the workflow's artifact upload.
+``--check`` runs the smoke sweep and FAILS on a >15% regression of any
+gated metric against the committed ``benchmarks/baselines/smoke.json``
+(ratio metrics only, so the gate survives CI machine variance; the
+absolute numbers ride along in the JSON artifact for the trajectory).
 """
 import os
 import sys
@@ -19,7 +24,8 @@ import sys
 # The dry-run cells want 512 fake devices; the measured serving cells
 # must NOT inherit that (they time real dispatch on the host's cores),
 # so only set the flag when this process will actually lower cells.
-if "--serving" not in sys.argv and "--smoke" not in sys.argv:
+if "--serving" not in sys.argv and "--smoke" not in sys.argv \
+        and "--check" not in sys.argv:
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=512")
 
@@ -157,6 +163,52 @@ def smoke_cell():
     return r.returncode
 
 
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "smoke.json")
+
+
+def _lookup(tree, dotted):
+    for part in dotted.split("."):
+        tree = tree[part]
+    return tree
+
+
+def check_cell(baseline_path=BASELINE):
+    """Regression gate: run the smoke sweep, then compare every gated
+    metric against the committed baseline; any metric more than
+    ``tolerance`` (default 15%) BELOW baseline fails the job."""
+    rc = smoke_cell()
+    if rc:
+        print("perf check: smoke run itself failed")
+        return rc
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(os.path.join(OUT, "smoke.json")) as f:
+        cur = json.load(f)
+    tol = float(base.get("tolerance", 0.15))
+    failures = []
+    print(f"\n===== §Perf regression check (tolerance {tol:.0%}) =====")
+    for name, want in base["metrics"].items():
+        got = float(_lookup(cur, name))
+        floor = want * (1.0 - tol)
+        status = "OK " if got >= floor else "REGRESSED"
+        print(f"  {name}: baseline {want:.3f}  current {got:.3f}  "
+              f"floor {floor:.3f}  {status}")
+        if got < floor:
+            failures.append(name)
+    report = {"baseline": base["metrics"], "tolerance": tol,
+              "current": {n: float(_lookup(cur, n))
+                          for n in base["metrics"]},
+              "failures": failures, "ok": not failures}
+    with open(os.path.join(OUT, "check.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    if failures:
+        print(f"perf check: FAIL — regressed metrics: {failures}")
+        return 1
+    print("perf check: PASS")
+    return 0
+
+
 def serving_cell():
     """§Perf serving cells: the measured (not dry-run) serving
     benchmarks.  Each runs in a subprocess so its device flags don't
@@ -201,7 +253,12 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: fast LM serving sweep, JSON to "
                          "artifacts/perf/smoke.json")
+    ap.add_argument("--check", action="store_true",
+                    help="run the smoke sweep and fail on >15%% "
+                         "regression vs benchmarks/baselines/smoke.json")
     args = ap.parse_args()
+    if args.check:
+        raise SystemExit(check_cell())
     if args.smoke:
         raise SystemExit(smoke_cell())
     if args.serving:

@@ -216,11 +216,15 @@ def estimator_flops(h: int, w: int, c: int = 3) -> int:
 
 def estimate(inputs, kind: str = "image", cfg: DifficultyConfig = DEFAULT,
              use_kernel: bool = False, **kw):
-    """Unified entry point.  kind: image | tokens | latent."""
+    """Unified entry point.  kind: image | tokens | latent.
+
+    ``use_kernel=True`` routes the image estimator through
+    ``repro.kernels.dispatch`` (fused Pallas kernel on TPU, this
+    module's reference chain elsewhere)."""
     if kind == "image":
         if use_kernel:
-            from repro.kernels.difficulty import ops as dops
-            return dops.image_difficulty(inputs, cfg)
+            from repro.kernels import dispatch as KD
+            return KD.image_difficulty(inputs, cfg)
         return image_difficulty(inputs, cfg)
     if kind == "tokens":
         return token_difficulty(inputs, cfg)

@@ -10,8 +10,8 @@ Execution modes (DESIGN.md §4.1):
   ``repro.engine`` (real FLOP savings via batch compaction).
 
 Confidence functionals per family:
-* classifiers — max softmax probability (paper), optionally via the fused
-  ``exit_gate`` Pallas kernel;
+* classifiers — max softmax probability (paper); the serving engines
+  fuse it with the Alg. 1 gate through ``repro.kernels.dispatch``;
 * diffusion  — convergence of consecutive exit predictions.
 """
 from __future__ import annotations
@@ -41,10 +41,16 @@ class DartParams:
 
 
 def confidence_from_logits(logits, use_kernel: bool = False):
-    """Max softmax probability per sample.  logits: (..., V) -> (...)."""
+    """Max softmax probability per sample.  logits: (..., V) -> (...).
+
+    This jnp composition IS the reference the fused kernels are held to
+    (``kernels/exit_gate/ref.py`` reuses it bit for bit).
+    ``use_kernel=True`` routes through ``kernels.dispatch`` — which
+    picks the fused Pallas gate only where it pays (TPU, VMEM-resident
+    rows) and this same chain everywhere else."""
     if use_kernel:
-        from repro.kernels.exit_gate import ops as gops
-        return gops.softmax_confidence(logits)[0]
+        from repro.kernels import dispatch as KD
+        return KD.softmax_confidence(logits)[0]
     return jnp.max(jax.nn.softmax(logits.astype(jnp.float32), axis=-1),
                    axis=-1)
 

@@ -70,7 +70,7 @@ class DartEngine:
                  confidence: str = "softmax-max",
                  difficulty: str = "image",
                  optimizer: str = "joint_dp",
-                 cum_costs=None, buckets=None, use_kernel: bool = True,
+                 cum_costs=None, buckets=None,
                  adapt: bool = True, update_every: int = 100):
         self.cfg = model_cfg
         self.params = params
@@ -90,7 +90,10 @@ class DartEngine:
         # up to a multiple of this (1 eagerly; the sharded engine sets it
         # to the replica count so the mesh divides every bucket evenly).
         self.replica_multiple = 1
-        self.use_kernel = use_kernel and confidence == "softmax-max"
+        # Difficulty/gate calls go through repro.kernels.dispatch; the
+        # sharded engines extend this with their mesh so pallas backends
+        # shard_map over the data axis (dispatch ignores it on xla).
+        self.kernel_kw: dict = {}
         self.adapt = adapt
         self.update_every = update_every
         self.total_latency_s = 0.0
@@ -108,7 +111,8 @@ class DartEngine:
             self._exit = [
                 jax.jit(lambda p, h, s=s: self.family.apply_exit(
                     p, h, s, cfgc)) for s in range(self.n_exits)]
-        self._alpha = jax.jit(lambda x: self._diff_fn(x, self.dcfg))
+        self._alpha = jax.jit(
+            lambda x: self._diff_fn(x, self.dcfg, **self.kernel_kw))
         self._forward = jax.jit(
             lambda p, x: self.family.forward(p, x, cfgc))
 
@@ -222,10 +226,11 @@ class DartEngine:
         return self.compactor.padded_size(n, self.replica_multiple)
 
     def _gate(self, logits, eff_thresh):
-        if self.use_kernel:
-            from repro.kernels.exit_gate import ops as gops
-            conf, ent, pred, fire = gops.exit_gate(
-                logits, jnp.asarray(eff_thresh, jnp.float32))
+        if self.confidence == "softmax-max":
+            from repro.kernels import dispatch as KD
+            conf, _, pred, fire = KD.exit_gate(
+                logits, jnp.asarray(eff_thresh, jnp.float32),
+                **self.kernel_kw)
             return conf, pred, fire.astype(bool)
         conf = self._conf_fn(logits)
         pred = jnp.argmax(logits, axis=-1)

@@ -28,9 +28,13 @@ Two execution paths serve bit-identical decisions (ISSUE 4 tentpole):
 
 The exit gate uses the ``lm-token`` confidence functional and the
 ``token_difficulty_ema`` decode-time difficulty estimator from the
-engine registries.  Like the sharded classifier engine, the compiled
-path never uses the Pallas kernels (``pallas_call`` does not partition
-under GSPMD on the host platform).
+engine registries.  Inside the fused step the whole exit head —
+rmsnorm → unembed matmul → softmax confidence → Eq. 19 threshold gate —
+is ONE ``repro.kernels.dispatch`` call (ISSUE 5 tentpole): dispatch
+shard_maps the fused Pallas exit-head kernel over the ``("data",)``
+axis on TPU (solving the "pallas_call does not partition under GSPMD"
+blocker) and lowers to the bit-identical jnp chain on xla backends,
+so the eager-oracle guarantee is unchanged on this CPU container.
 
 MoE caveat: capacity-based expert dispatch makes a token's output
 depend on which other tokens share its batch, so for MoE configs the
@@ -114,7 +118,7 @@ class LMDecodeEngine:
     """
 
     def __init__(self, cfg, params, dart: DartParams, *,
-                 buckets=(1, 2, 4, 8, 16, 32, 64, 128), use_kernel=False,
+                 buckets=(1, 2, 4, 8, 16, 32, 64, 128),
                  confidence: str = "lm-token", mesh=None,
                  data_axis: str = "data"):
         assert not cfg.layer_scan
@@ -122,6 +126,7 @@ class LMDecodeEngine:
         self.params = params
         self.compactor = BatchCompactor(buckets)
         self.mesh = mesh
+        self.confidence = confidence
         self._conf_fn = REG.get_confidence(confidence)
         self.stages = _stages(cfg)
         self.n_exits = len(self.stages)
@@ -144,7 +149,6 @@ class LMDecodeEngine:
         if mesh is not None:
             from repro.engine.sharded import _silence_donation_warning
             _silence_donation_warning()
-            use_kernel = False           # pallas doesn't partition
             self.data_axis = data_axis
             self.n_replicas = int(mesh.shape[data_axis])
             self.replica_multiple = self.n_replicas
@@ -163,7 +167,10 @@ class LMDecodeEngine:
         else:
             self.n_replicas = 1
             self.replica_multiple = 1
-        self.use_kernel = use_kernel
+        # kernels.dispatch shard_maps pallas backends over the data axis
+        # inside the fused decode steps (xla partitions under GSPMD)
+        self.kernel_kw = {} if mesh is None \
+            else {"mesh": mesh, "axis": data_axis}
 
         cfgc = cfg
         self._stage_fns = [
@@ -321,7 +328,7 @@ class LMDecodeEngine:
                 self.layers_run += (bnd - a) * n
 
             logits = self._exit_logits[s](self.params, x_new[:n, 0])
-            conf = self._conf_fn(logits, use_kernel=self.use_kernel)
+            conf = self._conf_fn(logits)
             pred = jnp.argmax(logits, -1)
             conf, pred = np.asarray(conf), np.asarray(pred)
 
@@ -444,17 +451,20 @@ class LMDecodeEngine:
                     cache[i], new_sl[j])
             x_full = x_full.at[idx].set(x_new, mode="drop")
 
-            logits = TLM.exit_logits(params, cfg, x_new[:, 0], exit_name)
-            conf = self._conf_fn(logits)
-            pred = jnp.argmax(logits, -1)
             vb = valid > 0
             if final:
-                fire = vb                       # Alg. 1 line 12
+                # Alg. 1 line 12: the final head always accepts
+                eff = jnp.full(idx.shape, -1.0, jnp.float32)
             else:
                 al = jnp.take(alpha, idx, mode="clip")
                 eff = TH.stage_threshold(state.tau[s], state.coef[s], al,
                                          state.beta_diff)
-                fire = (conf > eff) & vb
+            conf, pred, fire = self._head_traced(params, x_new[:, 0],
+                                                 exit_name, eff)
+            # the unconditional final accept must not depend on the
+            # confidence functional's range (the -1.0 eff is only a
+            # belt-and-braces sentinel for bounded functionals)
+            fire = vb if final else (fire & vb)
             idx_fire = jnp.where(fire, idx, bp)  # non-fired -> dropped
             toks = toks.at[idx_fire].set(pred.astype(toks.dtype),
                                          mode="drop")
@@ -469,6 +479,26 @@ class LMDecodeEngine:
             step, donate_argnums=(1, 2, 3, 4, 5),
             out_shardings=(self._state_sh, self._row))
         return self._steps[key]
+
+    def _head_traced(self, params, h, exit_name: str, eff):
+        """The decode-time exit decision for one stage: rmsnorm → unembed
+        matmul → softmax confidence → Eq. 19 gate, as ONE
+        ``kernels.dispatch`` call for the ``lm-token`` functional (the
+        fused Pallas exit-head kernel on TPU, shard_map-wrapped over the
+        data axis; the bit-identical jnp chain on xla).  Returns
+        (conf, pred, fire bool)."""
+        cfg = self.cfg
+        if self.confidence == "lm-token":
+            from repro.kernels import dispatch as KD
+            norm = params["final_norm"] if exit_name == "final" \
+                else params["exit_heads"][exit_name]["norm"]
+            conf, pred, fire = KD.exit_head_gate(
+                h, norm["scale"], TLM._unembed_table(params, cfg), eff,
+                **self.kernel_kw)
+            return conf, pred, fire > 0
+        logits = TLM.exit_logits(params, cfg, h, exit_name)
+        conf = self._conf_fn(logits)
+        return conf, jnp.argmax(logits, -1), conf > eff
 
     def _propagate_traced(self, params, cache, h_exit, idx_fire,
                           cache_index, from_layer):

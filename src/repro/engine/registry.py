@@ -9,7 +9,9 @@ swappable strategy" design).
 Three tables:
 
 * ``CONFIDENCE``  — raw exit outputs → (E, B) confidence scores, larger
-  = more confident.  Kernel-accelerated paths opt in via ``use_kernel``.
+  = more confident.  Kernel acceleration is decided by
+  ``repro.kernels.dispatch`` (platform/VMEM backend selection), not by
+  per-call-site flags.
 * ``DIFFICULTY``  — model inputs → (B,) difficulty scores in [0, 1]
   (§II.A estimators + domain adapters).
 * ``OPTIMIZERS``  — ``PolicyOptimizer`` implementations: calibration
@@ -85,30 +87,27 @@ def get_optimizer(name: str) -> Callable:
 # ---------------------------------------------------------------------------
 
 @register_confidence("softmax-max")
-def _conf_softmax_max(logits, *, use_kernel: bool = False):
+def _conf_softmax_max(logits, **kw):
     """Max softmax probability (the paper's classifier criterion)."""
-    return R.confidence_from_logits(logits, use_kernel)
+    return R.confidence_from_logits(logits)
 
 
 @register_confidence("entropy")
-def _conf_entropy(logits, *, use_kernel: bool = False):
+def _conf_entropy(logits, **kw):
     """exp(−H(p)) — entropy mapped onto (0, 1] so that larger = more
     confident (BranchyNet's criterion under the common gate protocol)."""
     return jnp.exp(-R.entropy_from_logits(logits))
 
 
 @register_confidence("diffusion-convergence")
-def _conf_diffusion(eps_stack, *, use_kernel: bool = False):
+def _conf_diffusion(eps_stack, **kw):
     """Convergence of consecutive exit ε-predictions (diffusion)."""
     return R.diffusion_confidence(eps_stack)
 
 
 @register_confidence("lm-token")
-def _conf_lm_token(logits, *, use_kernel: bool = False):
+def _conf_lm_token(logits, **kw):
     """Next-token max softmax probability (CALM-style LM criterion)."""
-    if use_kernel:
-        from repro.kernels.exit_gate import ops as gops
-        return gops.softmax_confidence(logits)[0]
     return R.confidence_from_logits(logits)
 
 
@@ -117,9 +116,13 @@ def _conf_lm_token(logits, *, use_kernel: bool = False):
 # ---------------------------------------------------------------------------
 
 @register_difficulty("image")
-def _diff_image(inputs, cfg: DIFF.DifficultyConfig = DIFF.DEFAULT,
-                use_kernel: bool = False, **kw):
-    return DIFF.estimate(inputs, "image", cfg, use_kernel=use_kernel)
+def _diff_image(inputs, cfg: DIFF.DifficultyConfig = DIFF.DEFAULT, *,
+                mesh=None, axis="data", **kw):
+    """Eq. 8 image difficulty through the kernel dispatch layer (fused
+    Pallas estimator on TPU, jnp reference elsewhere; shard_map-wrapped
+    inside sharded steps when ``mesh`` is given)."""
+    from repro.kernels import dispatch as KD
+    return KD.image_difficulty(inputs, cfg, mesh=mesh, axis=axis)
 
 
 @register_difficulty("tokens")

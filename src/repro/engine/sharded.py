@@ -34,9 +34,13 @@ Design (ISSUE 2 tentpole):
   suite asserts compiled == eager for preds, exit indices and telemetry
   after the all-reduce.
 
-The compiled paths never use the Pallas exit-gate kernel: ``pallas_call``
-does not partition under GSPMD on the host platform, and the jnp gate is
-fused into the step anyway.
+Confidence + gate (and in-step Eq. 8 difficulty) route through
+``repro.kernels.dispatch`` (ISSUE 5 tentpole): the historical GSPMD
+blocker — ``pallas_call`` does not partition — is solved by dispatch
+wrapping pallas backends in ``shard_map`` over the ``("data",)`` axis,
+so each replica gates its local rows in one fused launch per exit; on
+this CPU container dispatch auto-selects the ``"xla"`` reference chain,
+which is bit-identical to the eager oracle (see docs/kernels.md).
 """
 from __future__ import annotations
 
@@ -81,11 +85,13 @@ class ShardedDartEngine(DartEngine):
 
     def __init__(self, model_cfg, params, *, mesh, state: EngineState,
                  acfg, data_axis: str = "data", **kw):
-        kw["use_kernel"] = False            # pallas doesn't partition
         super().__init__(model_cfg, params, state=state, acfg=acfg, **kw)
         _silence_donation_warning()
         self.mesh = mesh
         self.data_axis = data_axis
+        # kernels.dispatch shard_maps pallas backends over the data axis
+        # inside the compiled steps (xla backends partition under GSPMD)
+        self.kernel_kw = {"mesh": mesh, "axis": data_axis}
         self.n_replicas = int(mesh.shape[data_axis])
         self.replica_multiple = self.n_replicas    # bucket_key granularity
         self._repl = NamedSharding(mesh, P())
@@ -182,14 +188,11 @@ class ShardedDartEngine(DartEngine):
         def step(params, state, x, valid, *aux):
             self._count_trace(key)
             logits = self._forward_traced(params, x)     # (E, bp, C)
-            conf_stack = self._conf_fn(logits)
-            alpha = aux[0] if with_alpha else self._diff_fn(x, self.dcfg)
+            alpha = aux[0] if with_alpha \
+                else self._diff_fn(x, self.dcfg, **self.kernel_kw)
             eff = TH.adapt_thresholds(state.tau, self._coef_traced(state),
                                       alpha, state.beta_diff)
-            exit_idx, conf = TH.select_exit(conf_stack, eff)
-            preds_all = jnp.argmax(logits, axis=-1)
-            pred = jnp.take_along_axis(preds_all, exit_idx[None],
-                                       axis=0)[0]
+            exit_idx, conf, pred = self._route_traced(logits, eff)
             macs = cum[exit_idx]
             if record:
                 state = self._fold_traced(state, exit_idx, pred, conf,
@@ -205,8 +208,47 @@ class ShardedDartEngine(DartEngine):
     def _forward_traced(self, params, x):
         return self.family.forward(params, x, self.cfg)["exit_logits"]
 
+    def _route_traced(self, logits, eff):
+        """Alg. 1 over stacked exit logits (E, bp, C) with (bp, E-1)
+        effective thresholds -> (exit_idx, conf, pred).
+
+        For the paper's ``softmax-max`` functional every exit runs ONE
+        fused gate launch through ``kernels.dispatch`` (confidence +
+        argmax + Eq. 19 compare in a single VMEM pass per row on pallas
+        backends; the bit-identical jnp chain on xla).  Other
+        functionals keep the generic conf-stack path."""
+        e, bp = logits.shape[0], logits.shape[1]
+        if self.confidence != "softmax-max":
+            conf_stack = self._conf_fn(logits)
+            exit_idx, conf = TH.select_exit(conf_stack, eff)
+            preds_all = jnp.argmax(logits, axis=-1)
+            pred = jnp.take_along_axis(preds_all, exit_idx[None],
+                                       axis=0)[0]
+            return exit_idx, conf, pred
+        from repro.kernels import dispatch as KD
+        confs, preds, fires = [], [], []
+        for i in range(e):
+            th_i = eff[:, i] if i < e - 1 \
+                else jnp.full((bp,), -1.0, jnp.float32)
+            c, _, p, f = KD.exit_gate(logits[i], th_i, **self.kernel_kw)
+            confs.append(c)
+            preds.append(p)
+            # Alg. 1 line 12: the final exit accepts unconditionally,
+            # whatever the confidence functional's range
+            fires.append(f if i < e - 1 else jnp.ones_like(f))
+        fires = jnp.stack(fires, axis=1) > 0            # (bp, E)
+        exit_idx = jnp.argmax(fires, axis=1)            # first firing exit
+        conf = jnp.take_along_axis(jnp.stack(confs, 1), exit_idx[:, None],
+                                   axis=1)[:, 0]
+        pred = jnp.take_along_axis(jnp.stack(preds, 1), exit_idx[:, None],
+                                   axis=1)[:, 0]
+        return exit_idx, conf, pred
+
     def _stage_step(self, s: int, bp: int):
-        """Fused stage + exit head + gate for bucket ``bp``."""
+        """Fused stage + exit head + gate for bucket ``bp``.  The gate
+        (confidence + argmax + Eq. 19 compare) is one dispatch-routed
+        launch — shard_map-wrapped pallas on TPU, the bit-identical jnp
+        chain on xla."""
         key = ("stage", s, bp)
         if key in self._steps:
             return self._steps[key]
@@ -215,6 +257,11 @@ class ShardedDartEngine(DartEngine):
             self._count_trace(key)
             h2 = self.family.apply_stage(params, h, s, self.cfg)
             logits = self.family.apply_exit(params, h2, s, self.cfg)
+            if self.confidence == "softmax-max":
+                from repro.kernels import dispatch as KD
+                conf, _, pred, fire = KD.exit_gate(logits, eff,
+                                                   **self.kernel_kw)
+                return h2, conf, pred, fire > 0
             conf = self._conf_fn(logits)
             pred = jnp.argmax(logits, axis=-1)
             return h2, conf, pred, conf > eff

@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Fused Pallas kernels for the paper's compute hot-spots, each shipped
+# as <name>_kernel.py (the kernel) + ref.py (the pure-jnp oracle that IS
+# the "xla" backend) + ops.py (stable import path).  ALL production
+# callers go through repro.kernels.dispatch — the one backend-selection
+# layer (pallas / pallas-interpret / xla, VMEM budget, shard_map
+# wrapping, block autotune).  See docs/kernels.md.

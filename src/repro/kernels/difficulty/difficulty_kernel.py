@@ -70,12 +70,15 @@ def _kernel(img_ref, out_ref, *, tau_edge, var_scale, grad_scale, w1, w2, w3):
 
 def difficulty_pallas(images, *, tau_edge=0.1, var_scale=0.05,
                       grad_scale=0.2, w1=0.4, w2=0.3, w3=0.3,
-                      interpret=True):
+                      interpret=None):
     """images: (B, H, W, C) → (B, 4) = (α_edge, α_var, α_grad, α).
 
-    interpret=True executes the kernel body on CPU (this container);
-    on TPU hardware pass interpret=False for the compiled Mosaic kernel.
+    ``interpret=None`` auto-resolves to interpret mode off-TPU (the raw
+    kernel stays runnable in tests on this CPU container) and to the
+    compiled Mosaic kernel on TPU; production traffic goes through
+    ``kernels.dispatch``, which never auto-selects the interpreter.
     """
+    from repro.kernels.dispatch import resolve_interpret
     b, h, w, c = images.shape
     kernel = functools.partial(_kernel, tau_edge=tau_edge,
                                var_scale=var_scale, grad_scale=grad_scale,
@@ -86,5 +89,5 @@ def difficulty_pallas(images, *, tau_edge=0.1, var_scale=0.05,
         grid=(b,),
         in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
         out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(images)

@@ -1,41 +1,27 @@
-"""Jitted public wrapper for the fused difficulty kernel.
+"""Public wrappers for the fused difficulty kernel.
 
-Dispatch policy: images whose VMEM footprint exceeds the budget fall back
-to the pure-jnp reference (XLA will tile those itself); everything else
-takes the single-pass Pallas kernel.
+Backend selection (pallas / pallas-interpret / xla), the VMEM-budget
+fallback (images whose working set exceeds the budget take the jnp
+reference — XLA tiles those itself) and shard_map wrapping live in
+``repro.kernels.dispatch``; these wrappers keep the historical import
+path alive.  Interpret mode is NEVER a silent default here — it runs
+only when explicitly forced.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
 from repro.core.difficulty import DifficultyConfig, DEFAULT
-from repro.kernels.difficulty.difficulty_kernel import difficulty_pallas
-from repro.kernels.difficulty import ref
-
-VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+from repro.kernels import dispatch
 
 
-def _fits_vmem(shape) -> bool:
-    _, h, w, c = shape
-    # image + gray + 2 stencil temporaries, fp32
-    return (h * w * (c + 3) * 4) <= VMEM_BUDGET_BYTES
-
-
-@partial(jax.jit, static_argnames=("cfg", "interpret"))
-def components(images, cfg: DifficultyConfig = DEFAULT, interpret=True):
+def components(images, cfg: DifficultyConfig = DEFAULT, *, mesh=None,
+               axis="data", backend=None):
     """(B, H, W, C) -> (B, 4): α_edge, α_var, α_grad, α."""
-    kw = dict(tau_edge=cfg.tau_edge, var_scale=cfg.var_scale,
-              grad_scale=cfg.grad_scale, w1=cfg.w_edge, w2=cfg.w_variance,
-              w3=cfg.w_gradient)
-    if _fits_vmem(images.shape):
-        return difficulty_pallas(images, interpret=interpret, **kw)
-    return ref.ref_components(images, **kw)
+    return dispatch.difficulty_components(images, cfg, mesh=mesh,
+                                          axis=axis, backend=backend)
 
 
-def image_difficulty(images, cfg: DifficultyConfig = DEFAULT,
-                     interpret=True):
+def image_difficulty(images, cfg: DifficultyConfig = DEFAULT, *, mesh=None,
+                     axis="data", backend=None):
     """Fused α only — drop-in for core.difficulty.image_difficulty."""
-    return components(images, cfg, interpret)[:, 3]
+    return dispatch.image_difficulty(images, cfg, mesh=mesh, axis=axis,
+                                     backend=backend)

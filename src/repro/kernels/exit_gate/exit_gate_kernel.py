@@ -12,9 +12,17 @@ softmax→max→argmax→compare reads the logits from HBM three times and
 materializes the (B, V) softmax; this kernel reads each row once and
 writes 4 scalars, turning the gate from memory-bound to free.
 
-Grid: (B,) with the full row per step.  For rows beyond the VMEM budget
-ops.py falls back to the jnp reference.  Numerics: fp32 max-subtracted
-log-sum-exp, bitwise-stable argmax (first max index), matching ref.py.
+Grid: (B / block_b,) with ``block_b`` rows per step — ``block_b`` comes
+from the dispatch autotune table (8 rows for classifier-sized
+vocabularies, 1 VMEM-resident row for LM vocabularies).  Rows beyond
+the VMEM budget never reach this kernel: ``kernels.dispatch`` routes
+them to the jnp reference.  Numerics: fp32 max-subtracted log-sum-exp,
+bitwise-stable argmax (first max index), matching ref.py.
+
+``interpret=None`` auto-resolves to interpret mode off-TPU so the raw
+kernel stays runnable in tests on this CPU container; production
+callers go through ``kernels.dispatch``, which only ever picks the
+compiled kernel on TPU and the interpreter when explicitly forced.
 """
 from __future__ import annotations
 
@@ -26,27 +34,35 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(logits_ref, thresh_ref, conf_ref, ent_ref, pred_ref, fire_ref):
-    row = logits_ref[0].astype(jnp.float32)              # (V,)
-    v = row.shape[0]
-    m = jnp.max(row)
+    rows = logits_ref[...].astype(jnp.float32)           # (block_b, V)
+    v = rows.shape[-1]
+    m = jnp.max(rows, axis=-1, keepdims=True)
     # first-argmax (ties to lowest index, matches jnp.argmax)
-    idx = jnp.argmin(jnp.where(row == m, jax.lax.iota(jnp.int32, v), v))
-    ex = jnp.exp(row - m)
-    s = jnp.sum(ex)
+    iota = jax.lax.broadcasted_iota(jnp.int32, rows.shape, 1)
+    idx = jnp.min(jnp.where(rows == m, iota, v), axis=-1)
+    ex = jnp.exp(rows - m)
+    s = jnp.sum(ex, axis=-1)
     conf = 1.0 / s
     # H = log s − Σ (l−m)·exp(l−m) / s
-    ent = jnp.log(s) - jnp.sum((row - m) * ex) / s
-    conf_ref[0] = conf
-    ent_ref[0] = ent
-    pred_ref[0] = idx.astype(jnp.int32)
-    fire_ref[0] = (conf > thresh_ref[0]).astype(jnp.int32)
+    ent = jnp.log(s) - jnp.sum((rows - m) * ex, axis=-1) / s
+    conf_ref[...] = conf
+    ent_ref[...] = ent
+    pred_ref[...] = idx.astype(jnp.int32)
+    fire_ref[...] = (conf > thresh_ref[...]).astype(jnp.int32)
 
 
-def exit_gate_pallas(logits, thresholds, *, interpret=True):
+def exit_gate_pallas(logits, thresholds, *, block_b: int = 1,
+                     interpret=None):
     """logits: (B, V); thresholds: (B,) effective τ' per sample.
 
-    Returns (conf (B,), entropy (B,), pred (B,) int32, fire (B,) int32)."""
+    ``block_b`` rows per grid step (must divide B — the dispatch layer
+    guarantees that from the autotune table and the power-of-two batch
+    buckets).  Returns (conf (B,), entropy (B,), pred (B,) int32,
+    fire (B,) int32)."""
+    from repro.kernels.dispatch import resolve_interpret
     b, v = logits.shape
+    if b % block_b:
+        raise ValueError(f"block_b={block_b} does not divide batch {b}")
     return pl.pallas_call(
         _kernel,
         out_shape=(
@@ -55,12 +71,12 @@ def exit_gate_pallas(logits, thresholds, *, interpret=True):
             jax.ShapeDtypeStruct((b,), jnp.int32),
             jax.ShapeDtypeStruct((b,), jnp.int32),
         ),
-        grid=(b,),
-        in_specs=[pl.BlockSpec((1, v), lambda i: (i, 0)),
-                  pl.BlockSpec((1,), lambda i: (i,))],
-        out_specs=(pl.BlockSpec((1,), lambda i: (i,)),
-                   pl.BlockSpec((1,), lambda i: (i,)),
-                   pl.BlockSpec((1,), lambda i: (i,)),
-                   pl.BlockSpec((1,), lambda i: (i,))),
-        interpret=interpret,
+        grid=(b // block_b,),
+        in_specs=[pl.BlockSpec((block_b, v), lambda i: (i, 0)),
+                  pl.BlockSpec((block_b,), lambda i: (i,))],
+        out_specs=(pl.BlockSpec((block_b,), lambda i: (i,)),
+                   pl.BlockSpec((block_b,), lambda i: (i,)),
+                   pl.BlockSpec((block_b,), lambda i: (i,)),
+                   pl.BlockSpec((block_b,), lambda i: (i,))),
+        interpret=resolve_interpret(interpret),
     )(logits, thresholds)

@@ -1,32 +1,26 @@
-"""Jitted public wrapper for the fused exit-gate kernel."""
+"""Public wrappers for the fused exit-gate kernel.
+
+Backend selection (pallas / pallas-interpret / xla), the VMEM-budget
+fallback and shard_map wrapping all live in ``repro.kernels.dispatch``;
+these wrappers keep the historical import path alive.  Interpret mode
+is NEVER a silent default here — it runs only when explicitly forced
+(``dispatch.force_backend("pallas-interpret")`` or
+``REPRO_KERNEL_BACKEND``) or when calling the raw kernel directly.
+"""
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.exit_gate.exit_gate_kernel import exit_gate_pallas
-from repro.kernels.exit_gate import ref
-
-VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+from repro.kernels import dispatch
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def exit_gate(logits, thresholds, interpret=True):
-    """Fused (conf, entropy, pred, fire).  logits (B, V), thresholds (B,)."""
-    b, v = logits.shape
-    if v * 4 * 2 <= VMEM_BUDGET_BYTES:
-        return exit_gate_pallas(logits, thresholds, interpret=interpret)
-    return ref.ref_exit_gate(logits, thresholds)
+def exit_gate(logits, thresholds, *, mesh=None, axis="data", backend=None):
+    """Fused (conf, entropy, pred, fire).  logits (B, V), thresholds
+    (B,).  See ``dispatch.exit_gate``."""
+    return dispatch.exit_gate(logits, thresholds, mesh=mesh, axis=axis,
+                              backend=backend)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def softmax_confidence(logits, interpret=True):
+def softmax_confidence(logits, *, mesh=None, axis="data", backend=None):
     """(conf, pred) without a threshold (gating done by the caller).
-    Accepts (..., V); flattens leading dims for the kernel grid."""
-    shape = logits.shape
-    flat = logits.reshape(-1, shape[-1])
-    conf, _, pred, _ = exit_gate(flat, jnp.ones((flat.shape[0],),
-                                                jnp.float32), interpret)
-    return conf.reshape(shape[:-1]), pred.reshape(shape[:-1])
+    Accepts (..., V); leading dims are flattened into the kernel grid."""
+    return dispatch.softmax_confidence(logits, mesh=mesh, axis=axis,
+                                       backend=backend)

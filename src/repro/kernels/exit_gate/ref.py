@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for the fused exit-gate kernel."""
+"""Pure-jnp oracle for the fused exit-gate kernel.
+
+This IS the ``"xla"`` dispatch backend, so it must be bit-identical to
+the eager serving chain: ``conf`` uses the same ``max(softmax(...))``
+composition as ``core.routing.confidence_from_logits`` (NOT
+``exp(log_softmax)``, which differs in the low bits), ``pred`` is
+``jnp.argmax``, and ``fire`` is the strict Alg. 1 compare.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,10 +16,9 @@ def ref_exit_gate(logits, thresholds):
     """logits: (B, V); thresholds: (B,).
     Returns (conf, entropy, pred, fire) matching exit_gate_pallas."""
     lf = logits.astype(jnp.float32)
+    conf = jnp.max(jax.nn.softmax(lf, axis=-1), axis=-1)
     logp = jax.nn.log_softmax(lf, axis=-1)
-    p = jnp.exp(logp)
-    conf = jnp.max(p, axis=-1)
-    ent = -jnp.sum(p * logp, axis=-1)
+    ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
     pred = jnp.argmax(lf, axis=-1).astype(jnp.int32)
     fire = (conf > thresholds).astype(jnp.int32)
     return conf, ent, pred, fire

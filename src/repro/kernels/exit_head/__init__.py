@@ -1,0 +1,2 @@
+# Fused decode-time LM exit head: rmsnorm -> unembed matmul -> softmax
+# confidence -> Eq. 19 threshold gate, one kernel launch per stage.

@@ -1,0 +1,17 @@
+"""Public wrapper for the fused LM exit-head gate.
+
+Backend selection, the VMEM-budgeted vocab block and shard_map wrapping
+live in ``repro.kernels.dispatch``; this module keeps the package's
+``ops`` import path consistent with the other kernels.
+"""
+from __future__ import annotations
+
+from repro.kernels import dispatch
+
+
+def exit_head_gate(h, scale, table, thresholds, *, eps=1e-6, mesh=None,
+                   axis="data", backend=None):
+    """Fused rmsnorm → unembed → confidence → Eq. 19 gate.
+    See ``dispatch.exit_head_gate``."""
+    return dispatch.exit_head_gate(h, scale, table, thresholds, eps=eps,
+                                   mesh=mesh, axis=axis, backend=backend)

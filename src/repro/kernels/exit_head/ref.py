@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused LM exit-head gate.
+
+This IS the ``"xla"`` dispatch backend on the LM decode hot path, so it
+must be BIT-IDENTICAL to the chain the compiled decode step historically
+composed: ``models.layers.rmsnorm`` (fp32 normalize, scale, cast back),
+``transformer_lm.exit_logits``'s ``einsum("...d,vd->...v")`` unembed,
+the ``lm-token`` confidence (``max(softmax(logits.astype(f32)))``, same
+composition as ``core.routing.confidence_from_logits``), ``jnp.argmax``
+and the strict Alg. 1 threshold compare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_exit_head_gate(h, scale, table, thresholds, *, eps: float = 1e-6):
+    """h (B, D), scale (D,) rmsnorm weight, table (V, D) unembed,
+    thresholds (B,).  Returns (conf (B,) f32, pred (B,) i32,
+    fire (B,) i32)."""
+    dtype = h.dtype
+    x = h.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1,
+                                   keepdims=True) + eps)
+    hn = (x * scale.astype(jnp.float32)).astype(dtype)
+    logits = jnp.einsum("...d,vd->...v", hn, table)
+    conf = jnp.max(jax.nn.softmax(logits.astype(jnp.float32), axis=-1),
+                   axis=-1)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    fire = (conf > thresholds).astype(jnp.int32)
+    return conf, pred, fire

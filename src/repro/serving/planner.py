@@ -4,9 +4,11 @@ The paper's Eq. 8 estimator is cheap enough (≈79 KFLOPs/image, §III.B)
 to run at ADMISSION time, before the model sees the input.  That turns
 the scheduler's packing problem tractable: every request gets
 
-* ``alpha``          — its Eq. 8 difficulty, estimated once here and
-  handed to the engine at dispatch (``infer(..., alpha=...)``), so the
-  estimator never runs twice;
+* ``alpha``          — its Eq. 8 difficulty, estimated once here via
+  the engine's dispatch-routed estimator (``repro.kernels.dispatch``:
+  the fused single-pass Pallas kernel on TPU, the jnp reference chain
+  elsewhere) and handed to the engine at dispatch
+  (``infer(..., alpha=...)``), so the estimator never runs twice;
 * a difficulty CLASS — ``digitize(mean alpha, edges)``; the scheduler
   lanes/buckets requests per class, so buckets stay cost-homogeneous;
 * ``predicted_cost`` — expected normalized MACs/sample, from the
@@ -55,7 +57,10 @@ class AdmissionPlanner:
 
     # ------------------------------------------------------------------
     def admit(self, x: np.ndarray):
-        """(alpha (n,), difficulty class, predicted cost/sample)."""
+        """(alpha (n,), difficulty class, predicted cost/sample).
+
+        ``engine._alpha`` routes through ``kernels.dispatch``, so
+        admission pays the fused difficulty kernel where available."""
         alpha = np.asarray(self.engine._alpha(jnp.asarray(x)), np.float32)
         return (alpha,) + self.classify(alpha)
 
