@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test smoke engine-test bench bench-serving bench-async bench-lm \
-    bench-kernels perf-check docs-check deps
+    bench-cascade bench-kernels perf-check docs-check deps
 
 # Tier-1 verify (ROADMAP): docs lint + the full test suite, fail-fast.
 test: docs-check
@@ -35,6 +35,12 @@ bench-async:
 # (>= 1.5x tokens/s at equal p95; JSON to artifacts/perf/).
 bench-lm:
 	$(PY) -m benchmarks.serving_lm
+
+# Difficulty-routed multi-model cascade vs biggest-member-only serving
+# (cascade sustains more samples/s at equal p95; JSON to
+# artifacts/perf/serving_cascade.json).
+bench-cascade:
+	$(PY) -m benchmarks.serving_cascade
 
 # Fused-kernel microbenchmarks vs the composed XLA reference chains
 # (dispatch backends + the >=1.3x acceptance gate; JSON to

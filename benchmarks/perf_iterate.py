@@ -10,9 +10,10 @@ together with the napkin-math hypothesis that motivated each change.
   PYTHONPATH=src python -m benchmarks.perf_iterate --check
 
 ``--serving`` runs the measured serving benchmarks (sharded, async
-scheduler, LM decode) in subprocesses; ``--smoke`` is the CI variant:
-the fast LM-decode sweep only, with its JSON consolidated into
-``artifacts/perf/smoke.json`` for the workflow's artifact upload.
+scheduler, LM decode, cascade) in subprocesses; ``--smoke`` is the CI
+variant: the fast LM-decode and cascade sweeps, with their JSON
+consolidated into ``artifacts/perf/smoke.json`` for the workflow's
+artifact upload.
 ``--check`` runs the smoke sweep and FAILS on a >15% regression of any
 gated metric against the committed ``benchmarks/baselines/smoke.json``
 (ratio metrics only, so the gate survives CI machine variance; the
@@ -138,29 +139,35 @@ def iterate_cell(arch, shape, variants, multi_pod=False):
 
 
 def smoke_cell():
-    """CI smoke: the fast LM-decode serving sweep in a subprocess, its
-    JSON consolidated into artifacts/perf/smoke.json (uploaded as a
-    workflow artifact so the bench trajectory is tracked per commit)."""
+    """CI smoke: the fast measured serving sweeps (LM decode + cascade)
+    in subprocesses, their JSON consolidated into
+    artifacts/perf/smoke.json (uploaded as a workflow artifact so the
+    bench trajectory is tracked per commit)."""
     import subprocess
     env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
-    print("===== §Perf smoke: LM decode serving (measured) =====")
-    lm_json = os.path.join(OUT, "serving_lm.json")
-    if os.path.exists(lm_json):
-        # a stale artifact from a previous run must not masquerade as
-        # this run's numbers if the subprocess dies before writing
-        os.remove(lm_json)
-    r = subprocess.run(
-        [sys.executable, "-m", "benchmarks.serving_lm", "--smoke"],
-        env=env)
     os.makedirs(OUT, exist_ok=True)
-    summary = {"ok": r.returncode == 0}
-    if os.path.exists(lm_json):
-        with open(lm_json) as f:
-            summary["serving_lm"] = json.load(f)
+    summary, rc = {}, 0
+    for title, mod, key in (
+            ("LM decode serving", "benchmarks.serving_lm", "serving_lm"),
+            ("cascade serving", "benchmarks.serving_cascade",
+             "serving_cascade")):
+        print(f"===== §Perf smoke: {title} (measured) =====")
+        out_json = os.path.join(OUT, f"{key}.json")
+        if os.path.exists(out_json):
+            # a stale artifact from a previous run must not masquerade
+            # as this run's numbers if the subprocess dies before writing
+            os.remove(out_json)
+        r = subprocess.run([sys.executable, "-m", mod, "--smoke"],
+                           env=env)
+        rc = rc or r.returncode
+        if os.path.exists(out_json):
+            with open(out_json) as f:
+                summary[key] = json.load(f)
+    summary["ok"] = rc == 0
     with open(os.path.join(OUT, "smoke.json"), "w") as f:
         json.dump(summary, f, indent=1)
     print(f"smoke summary -> {os.path.join(OUT, 'smoke.json')}")
-    return r.returncode
+    return rc
 
 
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
@@ -241,7 +248,16 @@ def serving_cell():
           "through the session should lift tokens/s >=1.5x at equal p95")
     r3 = subprocess.run(
         [sys.executable, "-m", "benchmarks.serving_lm"], env=env)
-    return r1.returncode or r2.returncode or r3.returncode
+    print("\n===== §Perf cell: cascade serving (measured) =====")
+    print("    hypothesis: a 4x-cheaper small member terminating the "
+          "easy ~75% of the stream frees the big model for the hard "
+          "tail; at ~25% escalation the cascade's cost per sample is "
+          "~0.6x of big-only, so sustained samples/s at equal p95 "
+          "should beat serving everything through the big member")
+    r4 = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_cascade"], env=env)
+    return r1.returncode or r2.returncode or r3.returncode \
+        or r4.returncode
 
 
 def main():

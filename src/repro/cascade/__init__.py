@@ -1,0 +1,35 @@
+"""repro.cascade — difficulty-routed multi-model cascade serving.
+
+DART's difficulty signal applied ACROSS networks: a
+:class:`CascadeEngine` fronts an ordered list of DART engines of
+increasing capacity; easy requests terminate in the small model via its
+normal exits, hard ones escalate (Bolukbasi-style) carrying the smaller
+model's top confidence forward as an escalation prior.
+
+    from repro.cascade import CascadeEngine
+    from repro.serving import AsyncDartServer
+
+    cascade = CascadeEngine([small_engine, big_engine],
+                            member_costs=[0.2, 1.0])
+    cascade.calibrate(cal_data)            # joint cascade DP
+    with AsyncDartServer(cascade) as server:   # cascade scheduler
+        out = server.submit(x, deadline_ms=50).result()
+        out["member"]                      # which member resolved it
+
+Pieces:
+
+* :class:`CascadeEngine` (engine.py) — the cascade façade: escalation
+  gates, cascade-absolute cost accounting, joint calibration, batched +
+  per-request-oracle inference.
+* :class:`CascadeAsyncServer` / :class:`CascadePlanner` (serving.py) —
+  the async scheduler integration: (member, class) lanes, escalation
+  re-enqueue, per-member telemetry.  ``AsyncDartServer(cascade)``
+  builds it transparently.
+* The joint optimizer lives in ``repro.core.policy``
+  (``optimize_cascade_dp``) and is registered as ``"cascade_dp"`` in
+  ``repro.engine.registry``.
+"""
+from repro.cascade.engine import CascadeEngine
+from repro.cascade.serving import CascadeAsyncServer, CascadePlanner
+
+__all__ = ["CascadeEngine", "CascadeAsyncServer", "CascadePlanner"]

@@ -1,0 +1,343 @@
+"""CascadeEngine — difficulty-routed serving over a cascade of DART
+engines of increasing capacity.
+
+DART routes WITHIN one network; the same difficulty signal pays again
+ACROSS networks (Bolukbasi et al., "Adaptive Neural Networks for
+Efficient Inference"): easy requests terminate in a small model via its
+normal DART exits, hard ones escalate to the next member.  The cascade
+composes engines the rest of the repo already provides —
+
+    small = DartEngine.from_config(small_cfg, small_params)
+    big   = DartEngine.from_config(big_cfg, big_params, mesh=mesh)
+    cascade = CascadeEngine([small, big], member_costs=[0.2, 1.0])
+    cascade.calibrate(cal_data)          # joint cascade DP (§II.B ext.)
+    out = cascade.infer(x)               # pred/conf/exit_idx/member/macs
+
+Escalation semantics (per sample, elementwise — so the batched cascade
+is bit-identical to the per-request oracle on dense configs):
+
+* member m serves the sample with its OWN Alg. 1 routing, producing a
+  terminal (exit_idx, conf);
+* the sample escalates iff ``conf <= clip(θ_m + β_esc·α, 0, 1)`` —
+  Eq. 19 transposed across networks (the escalation analogue of the
+  within-network gate; final member always terminates);
+* the NEXT member's admission difficulty is the escalation prior
+  ``clip((1−w)·α + w·(1−conf), 0, 1)`` — the smaller model's residual
+  uncertainty folded into Eq. 8, so the big model's thresholds are
+  better informed than raw pixel statistics (Dong/Mao/Zhang:
+  exit outcomes are predictable from cheap pre-backbone signals).
+
+Cost accounting is cascade-absolute: ``member_costs`` gives each
+member's full-network cost in one shared unit (normalized so the
+BIGGEST member = 1.0; default: relative parameter counts), and a
+sample's ``macs`` is the sum over every member visited of that member's
+routed cost times its scale — directly comparable against the
+biggest-member-only baseline (its static cost is exactly 1.0).
+
+Modes:
+
+* ``masked``/``compacted`` — batched cascade; each member serves the
+  still-active subset through its own compiled path (one compiled step
+  per (member, bucket) — ``trace_counts`` nests per member).
+* ``oracle`` — per-request eager cascade: every sample served alone
+  through each member's eager/reference pass.  The equivalence suite
+  asserts batched == oracle for member/exit/pred.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as POL
+from repro.engine import registry as REG
+
+
+def _param_cost(engine) -> float:
+    """Default capacity proxy: total parameter count (used only when no
+    measured ``member_costs`` are given)."""
+    return float(sum(np.size(l) for l in jax.tree.leaves(engine.params)))
+
+
+class CascadeEngine:
+    """Ordered cascade of :class:`~repro.engine.engine.DartEngine` /
+    :class:`~repro.engine.sharded.ShardedDartEngine` members (smallest
+    first).  Duck-types the slice of the engine API the serving layer
+    consumes (``compactor`` / ``bucket_key`` / ``cum_costs`` /
+    ``record_requests`` / ``stats`` / ``infer``)."""
+
+    def __init__(self, members, *, theta=None, beta_esc: float = 0.3,
+                 prior_weight: float = 0.5, member_costs=None,
+                 optimizer: str = "cascade_dp"):
+        if len(members) < 2:
+            raise ValueError("a cascade needs at least 2 members")
+        self.members = list(members)
+        if member_costs is None:
+            member_costs = [_param_cost(m) for m in self.members]
+        mc = np.asarray(member_costs, float)
+        if len(mc) != len(self.members):
+            raise ValueError(f"{len(mc)} costs for {len(self.members)} "
+                             "members")
+        self.member_costs = mc / mc[-1]
+        if np.any(np.diff(self.member_costs) < 0):
+            raise ValueError(
+                f"members must be ordered by increasing capacity; got "
+                f"costs {self.member_costs}")
+        self.theta = np.full(len(members) - 1, 0.5) if theta is None \
+            else np.asarray(theta, float)
+        if self.theta.shape != (len(members) - 1,):
+            raise ValueError(f"theta must have {len(members) - 1} "
+                             f"entries, got {self.theta.shape}")
+        self.beta_esc = float(beta_esc)
+        self.prior_weight = float(prior_weight)
+        self.optimizer = optimizer
+        self._opt_fn = REG.get_optimizer(optimizer)
+        # Members must agree on the bucket lattice: the scheduler's flush
+        # planner keys consolidation on ONE bucket_key, and an escalated
+        # batch re-buckets under the next member.
+        b0 = tuple(self.members[0].compactor.buckets)
+        for m in self.members[1:]:
+            if tuple(m.compactor.buckets) != b0:
+                raise ValueError("cascade members must share the same "
+                                 "compactor buckets")
+        # Admission difficulty comes from the SMALLEST member's Eq. 8
+        # estimator (the cascade analogue of pre-backbone prediction).
+        self._alpha = self.members[0]._alpha
+        self._lock = threading.Lock()
+        self.admitted = 0
+        self.escalated = np.zeros(len(members) - 1, np.int64)
+        self.total_macs = 0.0
+
+    # ------------------------------------------------------------------
+    # scheduler duck-typing
+    # ------------------------------------------------------------------
+    @property
+    def compactor(self):
+        return self.members[0].compactor
+
+    def bucket_key(self, n: int) -> int:
+        """Conservative compile-cache key across members: the max of the
+        members' keys (they share buckets; only ``replica_multiple``
+        differs).  Per-member dispatches still pad with the member's own
+        ``bucket_key`` — this is the flush planner's view."""
+        return max(m.bucket_key(n) for m in self.members)
+
+    @property
+    def cum_costs(self) -> np.ndarray:
+        """The BIGGEST member's cost curve in cascade units (its full
+        network = 1.0) — the static reference every speedup/DAES number
+        is measured against."""
+        cum = np.asarray(self.members[-1].cum_costs, float)
+        return self.member_costs[-1] * cum / cum[-1]
+
+    @property
+    def n_exits(self) -> int:
+        return self.members[-1].n_exits
+
+    @property
+    def trace_counts(self) -> dict:
+        """(member_idx, *member_key) -> traces, pooled over members."""
+        out = {}
+        for i, m in enumerate(self.members):
+            for k, v in getattr(m, "trace_counts", {}).items():
+                out[(i,) + (k if isinstance(k, tuple) else (k,))] = v
+        return out
+
+    def record_requests(self, latencies_ms, missed=None) -> None:
+        """Request latency/SLO telemetry folds into the FIRST member's
+        state (one cascade = one request stream; ``stats()`` surfaces it
+        at the cascade level)."""
+        self.members[0].record_requests(latencies_ms, missed)
+
+    # ------------------------------------------------------------------
+    # escalation rule (host-side, elementwise)
+    # ------------------------------------------------------------------
+    def should_escalate(self, m: int, conf, alpha) -> np.ndarray:
+        """(B,) bool — escalate member ``m``'s terminal decisions.  The
+        final member never escalates."""
+        if m >= len(self.members) - 1:
+            return np.zeros(np.shape(conf), bool)
+        return POL.escalation_gate(float(self.theta[m]), alpha,
+                                   np.asarray(conf), self.beta_esc)
+
+    def escalation_alpha(self, alpha, conf) -> np.ndarray:
+        """Admission difficulty for the next member (escalation prior)."""
+        return np.asarray(POL.escalation_alpha(
+            alpha, np.asarray(conf), self.prior_weight), np.float32)
+
+    def member_macs(self, m: int, exit_idx) -> np.ndarray:
+        """Cascade-unit cost of member ``m`` terminating at
+        ``exit_idx``."""
+        cum = np.asarray(self.members[m].cum_costs, float)
+        return self.member_costs[m] * cum[np.asarray(exit_idx)] / cum[-1]
+
+    def fold(self, m: int, esc_count: int, macs_sum: float,
+             n_admitted: int = 0) -> None:
+        """Host-side cascade counters (the serving layer calls this per
+        dispatched member bucket; ``infer`` folds its own)."""
+        with self._lock:
+            self.admitted += int(n_admitted)
+            if m < len(self.members) - 1:
+                self.escalated[m] += int(esc_count)
+            self.total_macs += float(macs_sum)
+
+    # ------------------------------------------------------------------
+    # calibration (§II.B extended across members)
+    # ------------------------------------------------------------------
+    def collect_calibration(self, data_cfg, *, n=512, split="eval",
+                            offset=0, batch=64) -> POL.CascadeCalibrationData:
+        """Measure the SAME ``n`` samples through every member and pool
+        them; the admission alpha (member 0's estimator) is shared so
+        escalation replay is exact."""
+        import dataclasses
+        ms = [m.collect_calibration(data_cfg, n=n, split=split,
+                                    offset=offset, batch=batch)
+              for m in self.members]
+        a0 = ms[0].alpha
+        ms = [ms[0]] + [dataclasses.replace(d, alpha=a0) for d in ms[1:]]
+        return POL.CascadeCalibrationData(ms, self.member_costs)
+
+    def calibrate(self, data, **kw) -> POL.CascadePolicyResult:
+        """Fit the joint cascade policy with the registered optimizer
+        (default ``cascade_dp``) and install it: each member's (tau,
+        coef, beta_diff) into that member's state, the escalation
+        thresholds into the cascade."""
+        if not isinstance(data, POL.CascadeCalibrationData):
+            data = self.collect_calibration(data, **{
+                k: kw.pop(k) for k in ("n", "split", "offset", "batch")
+                if k in kw})
+        kw.setdefault("beta_opt", float(self.members[-1].state.beta_opt))
+        kw.setdefault("beta_esc", self.beta_esc)
+        kw.setdefault("prior_weight", self.prior_weight)
+        pol = self._opt_fn(data, **kw)
+        for eng, p in zip(self.members, pol.members):
+            eng.state = eng.state.with_policy(
+                tau=p.tau, coef=p.coef, beta_diff=p.beta_diff)
+            if hasattr(eng, "_commit"):     # sharded member: re-pin
+                eng._commit()
+        self.theta = np.asarray(pol.theta, float)
+        self.beta_esc = float(pol.beta_esc)
+        self.prior_weight = float(pol.prior_weight)
+        return pol
+
+    # ------------------------------------------------------------------
+    # inference
+    # ------------------------------------------------------------------
+    def infer_member(self, m: int, x, *, alpha, mode: str = "masked",
+                     record: bool = True, pad_to: int | None = None) -> dict:
+        """One member's serving pass on an (already-routed) batch — the
+        async scheduler's per-(member, bucket) dispatch entry point.
+        ``alpha`` is the difficulty THIS member admits under (the raw
+        Eq. 8 estimate for member 0, the escalation prior after)."""
+        return self.members[m].infer(x, mode=mode, record=record,
+                                     alpha=alpha, pad_to=pad_to)
+
+    def infer(self, x, mode: str = "masked", record: bool | None = None,
+              alpha=None, pad_to: int | None = None) -> dict:
+        """Serve one batch through the whole cascade.
+
+        mode="masked"/"compacted" — batched: each member serves the
+            still-active subset through its own serving path.
+        mode="oracle" — per-request reference: every sample served alone
+            through each member's eager pass (never records).
+        Returns pred/conf/exit_idx (within the terminal member), member,
+        alpha (the ADMISSION Eq. 8 difficulty), macs (cascade units)."""
+        if mode == "oracle":
+            parts = [self._infer_eager(np.asarray(x)[i:i + 1],
+                                       None if alpha is None
+                                       else np.asarray(alpha)[i:i + 1])
+                     for i in range(np.asarray(x).shape[0])]
+            return {k: np.concatenate([p[k] for p in parts])
+                    for k in ("pred", "conf", "exit_idx", "member",
+                              "alpha", "macs")}
+        if mode == "eager":
+            return self._infer_eager(np.asarray(x), alpha)
+        if mode not in ("masked", "compacted"):
+            raise ValueError(f"unknown mode {mode!r}; known: masked, "
+                             "compacted, eager, oracle")
+        return self._infer_batched(np.asarray(x), mode,
+                                   False if record is None else record,
+                                   alpha)
+
+    def _infer_eager(self, x, alpha=None) -> dict:
+        """Batched cascade over each member's eager/reference pass."""
+        from repro.engine.sharded import ShardedDartEngine
+
+        def call(eng, xs, a):
+            if isinstance(eng, ShardedDartEngine):
+                return eng.infer(xs, mode="eager", alpha=a)
+            return eng.infer(xs, mode="masked", record=False, alpha=a)
+        return self._cascade_pass(x, alpha, call, record=False)
+
+    def _infer_batched(self, x, mode, record, alpha=None) -> dict:
+        def call(eng, xs, a):
+            n = xs.shape[0]
+            pad = eng.bucket_key(n) if mode == "masked" \
+                and n <= eng.compactor.max_bucket else None
+            return eng.infer(xs, mode=mode, record=record, alpha=a,
+                             pad_to=pad)
+        return self._cascade_pass(x, alpha, call, record=record)
+
+    def _cascade_pass(self, x, alpha, call, record: bool) -> dict:
+        b = x.shape[0]
+        if alpha is None:
+            alpha = np.asarray(self._alpha(jnp.asarray(x)), np.float32)
+        else:
+            alpha = np.asarray(alpha, np.float32)
+
+        pred = np.zeros(b, np.int64)
+        conf = np.zeros(b, np.float32)
+        exit_idx = np.zeros(b, np.int64)
+        member = np.zeros(b, np.int64)
+        macs = np.zeros(b, np.float64)
+
+        active = np.arange(b)
+        a_cur = alpha
+        for m, eng in enumerate(self.members):
+            out = call(eng, x[active], a_cur)
+            c = np.asarray(out["conf"])
+            ei = np.asarray(out["exit_idx"])
+            pr = np.asarray(out["pred"])
+            macs[active] += self.member_macs(m, ei)
+            esc = self.should_escalate(m, c, a_cur)
+            term = active[~esc]
+            pred[term] = pr[~esc]
+            conf[term] = c[~esc]
+            exit_idx[term] = ei[~esc]
+            member[term] = m
+            if record:
+                self.fold(m, int(esc.sum()),
+                          float(self.member_macs(m, ei).sum()),
+                          n_admitted=b if m == 0 else 0)
+            a_cur = self.escalation_alpha(a_cur[esc], c[esc])
+            active = active[esc]
+            if not active.size:
+                break
+        return {"pred": pred, "conf": conf, "exit_idx": exit_idx,
+                "member": member, "alpha": alpha, "macs": macs}
+
+    # ------------------------------------------------------------------
+    # metering
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Cascade-level counters + every member's own stats."""
+        mstats = [m.stats() for m in self.members]
+        with self._lock:
+            admitted = self.admitted
+            escalated = self.escalated.copy()
+            total_macs = self.total_macs
+        out = {
+            "members": mstats,
+            "admitted": admitted,
+            "escalated": escalated.tolist(),
+            "escalation_rate": (escalated / max(admitted, 1)).tolist(),
+            "total_macs": total_macs,
+            "mean_macs": total_macs / max(admitted, 1),
+            "member_costs": self.member_costs.tolist(),
+            "theta": np.asarray(self.theta).tolist(),
+        }
+        if "requests" in mstats[0]:
+            out["requests"] = mstats[0]["requests"]
+        return out

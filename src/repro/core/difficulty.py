@@ -175,7 +175,14 @@ def latent_difficulty(latents, signal_frac, cfg: DifficultyConfig = DEFAULT):
 # Difficulty classes (admission-time traffic partitioning)
 # ---------------------------------------------------------------------------
 
-def difficulty_class(alpha, edges):
+#: Default class boundaries on Eq. 8 alpha — easy (0, 0.35], medium
+#: (0.35, 0.65], hard (0.65, 1].  The single source of truth for every
+#: consumer that partitions traffic by difficulty (the async scheduler's
+#: lanes, the admission planner's priors, cascade member routing).
+DEFAULT_EDGES = (0.35, 0.65)
+
+
+def difficulty_class(alpha, edges=DEFAULT_EDGES):
     """Partition Eq. 8 difficulties into classes: class k ⇔ alpha in
     (edges[k-1], edges[k]].  The async scheduler lanes requests by this
     so buckets stay cost-homogeneous.  Host inputs (python scalars /

@@ -236,6 +236,279 @@ def optimize_brute_force(data: CalibrationData, *, beta_opt=0.5,
                         objective=best[0], method="brute_force")
 
 
+def _route_np(conf, alpha, tau, coef, beta_diff):
+    """Numpy twin of :func:`TH.simulate_routing` (Alg. 1 over a conf
+    matrix) — same semantics (strict ``>`` gates, final exit always
+    accepts), kept host-side so the cascade coordinate ascent does not
+    pay a jax dispatch per candidate evaluation."""
+    eff = np.clip(np.asarray(coef)[None, :] * np.asarray(tau)[None, :]
+                  + beta_diff * np.asarray(alpha)[:, None], 0.0, 1.0)
+    fires = np.concatenate(
+        [conf[:, :-1] > eff, np.ones((conf.shape[0], 1), bool)], axis=1)
+    return np.argmax(fires, axis=1)
+
+
+@dataclasses.dataclass
+class CascadeCalibrationData:
+    """Pooled calibration measurements for a model cascade.
+
+    The SAME n samples are measured through every member (so escalation
+    outcomes can be replayed exactly), difficulty is shared:
+
+    members:      per-member :class:`CalibrationData`, ordered by
+                  capacity (smallest first); ``alpha`` of members[0] is
+                  the cascade's admission difficulty.
+    member_costs: (M,) full-network cost of each member in ONE shared
+                  unit (normalized so the biggest member = 1.0) — each
+                  member's ``cum_costs`` stays normalized within the
+                  member; the product is the cascade-absolute cost.
+    """
+    members: list
+    member_costs: np.ndarray
+
+    def __post_init__(self):
+        mc = np.asarray(self.member_costs, float)
+        if len(mc) != len(self.members):
+            raise ValueError(f"{len(mc)} costs for {len(self.members)} "
+                             "members")
+        self.member_costs = mc / mc[-1]
+        n = {d.conf.shape[0] for d in self.members}
+        if len(n) != 1:
+            raise ValueError(f"members measured on different sample "
+                             f"counts: {sorted(n)}")
+
+    @property
+    def n_members(self) -> int:
+        return len(self.members)
+
+    @property
+    def alpha(self) -> np.ndarray:
+        return self.members[0].alpha
+
+    def split(self, frac=0.8, seed=0):
+        """Train/holdout split applied consistently across members."""
+        n = self.members[0].conf.shape[0]
+        rs = np.random.RandomState(seed)
+        perm = rs.permutation(n)
+        k = int(n * frac)
+
+        def pick(d, idx):
+            return CalibrationData(
+                d.conf[idx], d.correct[idx], d.alpha[idx], d.cum_costs,
+                None if d.labels is None else d.labels[idx],
+                None if d.entropy is None else d.entropy[idx])
+        tr = CascadeCalibrationData(
+            [pick(d, perm[:k]) for d in self.members], self.member_costs)
+        va = CascadeCalibrationData(
+            [pick(d, perm[k:]) for d in self.members], self.member_costs)
+        return tr, va
+
+
+@dataclasses.dataclass
+class CascadePolicyResult:
+    """Joint policy for a cascade: per-member Eq. 19 exit policies plus
+    the inter-member escalation thresholds."""
+    members: list                # per-member PolicyResult
+    theta: np.ndarray            # (M-1,) escalation base thresholds
+    beta_esc: float              # difficulty sensitivity of escalation
+    prior_weight: float          # weight of (1 - conf) in the next alpha
+    objective: float             # empirical cascade J on the pool
+    method: str
+    diagnostics: dict | None = None
+
+
+def escalation_gate(theta_m, alpha, conf, beta_esc):
+    """Escalate iff the terminal confidence fails the difficulty-adapted
+    escalation threshold: conf <= clip(θ_m + β_esc·α, 0, 1) — Eq. 19
+    transposed across networks (Bolukbasi-style cascading)."""
+    eff = np.clip(theta_m + beta_esc * np.asarray(alpha), 0.0, 1.0)
+    return np.asarray(conf) <= eff
+
+
+def escalation_alpha(alpha, conf, prior_weight=0.5):
+    """Admission difficulty handed to the NEXT member: the raw Eq. 8
+    alpha blended with the smaller member's residual uncertainty
+    (1 − top confidence), so the big model's thresholds see an
+    escalation prior instead of the raw pixel statistics."""
+    a = (1.0 - prior_weight) * np.asarray(alpha) \
+        + prior_weight * (1.0 - np.asarray(conf))
+    return np.clip(a, 0.0, 1.0)
+
+
+def simulate_cascade(data: CascadeCalibrationData, member_pols, theta, *,
+                     beta_esc=0.3, prior_weight=0.5) -> dict:
+    """Replay the full cascade on the pooled calibration set.
+
+    Per member: Alg. 1 routing under that member's (tau, coef, beta_diff)
+    — with the ESCALATION-prior alpha for members > 0 — then the
+    escalation gate on the terminal confidence.  Returns per-sample
+    terminal member/exit/conf/correct and the TOTAL cascade cost paid
+    (every visited member's routed cost, in biggest-member units)."""
+    m_count = data.n_members
+    n = data.members[0].conf.shape[0]
+    alpha0 = np.asarray(data.members[0].alpha, float)
+    theta = np.asarray(theta, float)
+
+    member = np.zeros(n, np.int64)
+    exit_idx = np.zeros(n, np.int64)
+    conf_out = np.zeros(n)
+    correct = np.zeros(n)
+    cost = np.zeros(n)
+
+    active = np.arange(n)
+    a_cur = alpha0.copy()
+    for m in range(m_count):
+        if not len(active):
+            break
+        d, pol = data.members[m], member_pols[m]
+        conf_m = np.asarray(d.conf)[active]
+        idx = _route_np(conf_m, a_cur, pol.tau, pol.coef, pol.beta_diff)
+        csel = conf_m[np.arange(len(active)), idx]
+        cum = np.asarray(d.cum_costs, float)
+        cost[active] += data.member_costs[m] * cum[idx] / cum[-1]
+        esc = np.zeros(len(active), bool) if m == m_count - 1 else \
+            escalation_gate(theta[m], a_cur, csel, beta_esc)
+        term = active[~esc]
+        member[term] = m
+        exit_idx[term] = idx[~esc]
+        conf_out[term] = csel[~esc]
+        correct[term] = np.asarray(d.correct)[term, idx[~esc]]
+        a_cur = escalation_alpha(a_cur[esc], csel[esc], prior_weight)
+        active = active[esc]
+    return {"member": member, "exit_idx": exit_idx, "conf": conf_out,
+            "correct": correct, "cost": cost, "alpha": alpha0}
+
+
+def cascade_objective(data: CascadeCalibrationData, member_pols, theta, *,
+                      beta_opt=0.5, beta_esc=0.3,
+                      prior_weight=0.5) -> float:
+    """Eq. 10 generalized to the cascade: J = mean(A_terminal −
+    β_opt·C_total) with C_total the cost of EVERY member visited."""
+    sim = simulate_cascade(data, member_pols, theta, beta_esc=beta_esc,
+                           prior_weight=prior_weight)
+    return float(np.mean(sim["correct"] - beta_opt * sim["cost"]))
+
+
+def _theta_candidates(data, member_pols, m, beta_esc, prior_weight,
+                      theta) -> np.ndarray:
+    """Eq. 12 transposed to the m-th escalation gate: quantiles of the
+    member's TERMINAL confidence under the current cascade routing, plus
+    never-/always-escalate sentinels (clip maps −1 → gate at 0, which
+    softmax confidence never undercuts, and 1 → always)."""
+    sim = simulate_cascade(data, member_pols, theta, beta_esc=beta_esc,
+                           prior_weight=prior_weight)
+    at_m = sim["member"] == m
+    conf = sim["conf"][at_m] if at_m.any() \
+        else np.asarray(data.members[m].conf)[:, -1]
+    return np.concatenate([[-1.0], TH.candidate_thresholds(conf), [1.0]])
+
+
+def optimize_cascade_dp(data: CascadeCalibrationData, *, beta_opt=0.5,
+                        beta_esc=0.3, fit_beta_esc=False,
+                        prior_weight=0.5, sweeps=2,
+                        **dp_kw) -> CascadePolicyResult:
+    """Jointly optimize every member's exit thresholds AND the
+    escalation thresholds.
+
+    1. Seed each member with :func:`optimize_joint_dp` on its own
+       measurements, with the cost pressure scaled by the member's share
+       of cascade cost (β_opt·member_cost — a cheap member should spend
+       its exits freely, the big member is where compute hurts).
+    2. Pick each escalation threshold θ_m greedily over the Eq. 12
+       candidate grid against the TRUE pooled cascade objective.
+    3. Alternating coordinate ascent: re-polish every member tau and
+       every θ against the cascade objective until no move improves
+       (threshold interdependence ACROSS members — the reason
+       independent calibration is suboptimal — is scored exactly).
+    """
+    m_count = data.n_members
+    seeds = [optimize_joint_dp(d, beta_opt=beta_opt * data.member_costs[m],
+                               **dp_kw)
+             for m, d in enumerate(data.members)]
+    pols = [dataclasses.replace(p, tau=np.asarray(p.tau, float).copy())
+            for p in seeds]
+
+    betas = [beta_esc] if not fit_beta_esc else [0.0, 0.1, 0.2, 0.3, 0.4]
+    best = None
+    for be in betas:
+        theta = np.full(m_count - 1, 0.5)
+        cur = [dataclasses.replace(p, tau=p.tau.copy()) for p in pols]
+
+        def joint_j(ps, th):
+            return cascade_objective(data, ps, th, beta_opt=beta_opt,
+                                     beta_esc=be,
+                                     prior_weight=prior_weight)
+
+        # greedy theta init, boundary by boundary (small → large)
+        for m in range(m_count - 1):
+            cands = _theta_candidates(data, cur, m, be, prior_weight,
+                                      theta)
+            js = []
+            for c in cands:
+                t = theta.copy()
+                t[m] = c
+                js.append(joint_j(cur, t))
+            theta[m] = cands[int(np.argmax(js))]
+        best_j = joint_j(cur, theta)
+
+        for _ in range(sweeps):
+            improved = False
+            for m in range(m_count):           # member taus
+                e = data.members[m].n_exits
+                for i in range(e - 1):
+                    for c in TH.candidate_thresholds(
+                            data.members[m].conf[:, i]):
+                        trial = [dataclasses.replace(p, tau=p.tau.copy())
+                                 for p in cur]
+                        trial[m].tau[i] = c
+                        j = joint_j(trial, theta)
+                        if j > best_j + 1e-12:
+                            best_j, cur, improved = j, trial, True
+            for m in range(m_count - 1):       # escalation thresholds
+                for c in _theta_candidates(data, cur, m, be, prior_weight,
+                                           theta):
+                    t = theta.copy()
+                    t[m] = c
+                    j = joint_j(cur, t)
+                    if j > best_j + 1e-12:
+                        best_j, theta, improved = j, t, True
+            if not improved:
+                break
+        if best is None or best_j > best[0]:
+            best = (best_j, cur, theta, be)
+
+    j, cur, theta, be = best
+    return CascadePolicyResult(
+        members=[dataclasses.replace(p, method="cascade_dp")
+                 for p in cur],
+        theta=theta, beta_esc=be, prior_weight=prior_weight,
+        objective=j, method="cascade_dp",
+        diagnostics={"seed_objectives": [p.objective for p in seeds]})
+
+
+def optimize_cascade_independent(data: CascadeCalibrationData, *,
+                                 beta_opt=0.5, beta_esc=0.3,
+                                 prior_weight=0.5,
+                                 **dp_kw) -> CascadePolicyResult:
+    """The baseline the cascade DP argues against: each member calibrated
+    in isolation (same per-member DP seeds), escalation thresholds fixed
+    at the median Eq. 12 candidate — no cross-member interdependence."""
+    pols = [optimize_joint_dp(d, beta_opt=beta_opt * data.member_costs[m],
+                              **dp_kw)
+            for m, d in enumerate(data.members)]
+    theta = np.full(data.n_members - 1, 0.5)
+    for m in range(data.n_members - 1):
+        cands = _theta_candidates(data, pols, m, beta_esc, prior_weight,
+                                  theta)
+        theta[m] = float(np.median(cands[1:-1]))
+    j = cascade_objective(data, pols, theta, beta_opt=beta_opt,
+                          beta_esc=beta_esc, prior_weight=prior_weight)
+    return CascadePolicyResult(
+        members=pols, theta=theta, beta_esc=beta_esc,
+        prior_weight=prior_weight, objective=j,
+        method="cascade_independent")
+
+
 def optimize_independent(data: CalibrationData, *, beta_opt=0.5,
                          beta_diff=0.3) -> PolicyResult:
     """The baseline DART argues against: each exit's threshold tuned in

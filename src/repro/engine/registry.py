@@ -149,6 +149,11 @@ def _diff_zero(inputs, cfg: DIFF.DifficultyConfig = DIFF.DEFAULT, **kw):
 OPTIMIZERS["joint_dp"] = POL.optimize_joint_dp
 OPTIMIZERS["brute_force"] = POL.optimize_brute_force
 OPTIMIZERS["independent"] = POL.optimize_independent
+# Cascade solvers take a CascadeCalibrationData and return a
+# CascadePolicyResult (per-member Eq. 19 policies + escalation
+# thresholds); CascadeEngine.calibrate resolves them through here.
+OPTIMIZERS["cascade_dp"] = POL.optimize_cascade_dp
+OPTIMIZERS["cascade_independent"] = POL.optimize_cascade_independent
 
 
 def _objective(data: CalibrationData, idx, beta_opt: float) -> float:

@@ -35,6 +35,11 @@ request's outputs are identical to serving it alone through
 ``engine.infer`` (the admission alpha is handed to the engine, Alg. 1
 runs unchanged).  With §II.C adaptation on, request reordering shifts
 where the periodic coefficient updates fall — see docs/serving.md.
+
+Constructing ``AsyncDartServer`` with a ``repro.cascade.CascadeEngine``
+transparently builds the cascade scheduler (lanes keyed by
+(member, difficulty class); escalations re-enqueue into the next
+member's lanes) — see docs/serving.md's cascade section.
 """
 from repro.serving.loop import AsyncDartServer, SchedulerConfig
 from repro.serving.lm_session import LMDecodeSession

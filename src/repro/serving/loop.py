@@ -44,6 +44,8 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.core import daes as DAES
+from repro.core import difficulty as DIFF
 from repro.serving.planner import AdmissionPlanner
 from repro.serving.queue import RequestQueue
 from repro.serving.request import Request, RequestRejected
@@ -78,7 +80,7 @@ class SchedulerConfig:
     min_fill: float = 0.5
     mode: str = "masked"
     pipeline_depth: int = 2
-    edges: tuple = (0.35, 0.65)
+    edges: tuple = DIFF.DEFAULT_EDGES
     sample_ndim: int = 3
 
 
@@ -321,14 +323,35 @@ class AsyncDartServer(_BucketScheduler):
     scheduler decisions never change routing decisions: completed
     outputs are identical to serving each request alone through
     ``engine.infer`` (with §II.C adaptation on, reordering shifts where
-    the periodic updates fall — see docs/serving.md)."""
+    the periodic updates fall — see docs/serving.md).
+
+    Constructing with a :class:`~repro.cascade.engine.CascadeEngine`
+    transparently builds the cascade scheduler
+    (:class:`~repro.cascade.serving.CascadeAsyncServer`): lanes become
+    (member, difficulty class), escalations re-enqueue into the next
+    member's lanes."""
+
+    def __new__(cls, engine=None, *args, **kw):
+        if cls is AsyncDartServer and engine is not None:
+            from repro.cascade.engine import CascadeEngine
+            if isinstance(engine, CascadeEngine):
+                from repro.cascade.serving import CascadeAsyncServer
+                cls = CascadeAsyncServer
+        return object.__new__(cls)
 
     def __init__(self, engine, cfg: SchedulerConfig = SchedulerConfig(),
                  *, clock=time.monotonic, start: bool = True):
         self.engine = engine
-        self.planner = AdmissionPlanner(engine, edges=cfg.edges)
+        self.planner = self._make_planner(cfg)
+        # Per-lane Eq. 9 telemetry: static reference = the full network
+        # (for a cascade engine, the biggest member's full network).
+        self.daes = DAES.LaneDaesAccumulator(
+            static_macs=float(np.asarray(engine.cum_costs)[-1]))
         self._inflight: deque = deque()
         super().__init__(cfg, clock=clock, start=start)
+
+    def _make_planner(self, cfg: SchedulerConfig):
+        return AdmissionPlanner(self.engine, edges=cfg.edges)
 
     # -- hooks ----------------------------------------------------------
     def _bucket_key(self, n: int) -> int:
@@ -357,21 +380,25 @@ class AsyncDartServer(_BucketScheduler):
             else now + deadline_ms / 1e3,
             future=Future())
 
-    def _dispatch(self, reqs: list, reason: str) -> None:
-        x = np.concatenate([r.x for r in reqs])
-        alpha = np.concatenate([r.alpha for r in reqs])
-        # Masked dispatches pad to the bucket so every consolidation
-        # size inside a bucket reuses ONE compiled forward; compacted
-        # mode buckets its stages internally.  A single request larger
-        # than the biggest bucket goes through unpadded (the sharded
-        # engine chunk-splits it; the eager forward just runs that
-        # shape) — bucket_key would raise BatchTooLarge on it.
+    def _infer_batch(self, reqs: list, x, alpha) -> dict:
+        """ONE engine call for a flushed run of requests.  Masked
+        dispatches pad to the bucket so every consolidation size inside
+        a bucket reuses ONE compiled forward; compacted mode buckets its
+        stages internally.  A single request larger than the biggest
+        bucket goes through unpadded (the sharded engine chunk-splits
+        it; the eager forward just runs that shape) — bucket_key would
+        raise BatchTooLarge on it."""
         pad_to = self.engine.bucket_key(x.shape[0]) \
             if self.cfg.mode == "masked" \
             and x.shape[0] <= self.engine.compactor.max_bucket else None
+        return self.engine.infer(x, mode=self.cfg.mode, record=True,
+                                 alpha=alpha, pad_to=pad_to)
+
+    def _dispatch(self, reqs: list, reason: str) -> None:
+        x = np.concatenate([r.x for r in reqs])
+        alpha = np.concatenate([r.alpha for r in reqs])
         t0 = self._clock()
-        out = self.engine.infer(x, mode=self.cfg.mode, record=True,
-                                alpha=alpha, pad_to=pad_to)
+        out = self._infer_batch(reqs, x, alpha)
         # Service EMA from the dispatch call itself: it feeds the
         # deadline slack, so it must not absorb pipeline idle time (a
         # deferred materialization would look like a slow engine).  For
@@ -421,6 +448,9 @@ class AsyncDartServer(_BucketScheduler):
         # stats()["requests"] (the documented pattern).
         self.engine.record_requests(lats, missed)
         self.planner.observe(vals["exit_idx"], vals["alpha"])
+        for r, res in zip(reqs, results):
+            self.daes.observe(r.lane, res["conf"], res["macs"],
+                              res["alpha"])
         self.counters["completed"] += len(reqs)
         for r, res in zip(reqs, results):
             r.resolve(res)
@@ -438,4 +468,5 @@ class AsyncDartServer(_BucketScheduler):
             "depth_prior": self.planner.priors(),
             "service_ms_ema": self._service_s * 1e3,
         }
+        s["daes"] = self.daes.rows()
         return s

@@ -33,7 +33,8 @@ from repro.core import difficulty as DIFF
 
 
 class AdmissionPlanner:
-    def __init__(self, engine, edges=(0.35, 0.65), ema_decay: float = 0.9):
+    def __init__(self, engine, edges=DIFF.DEFAULT_EDGES,
+                 ema_decay: float = 0.9):
         self.engine = engine
         self.edges = np.asarray(edges, np.float32)
         self.n_classes = len(self.edges) + 1

@@ -73,6 +73,18 @@ class RequestQueue:
                 f"(priority {victim.priority})"))
             return "shed"
 
+    def requeue(self, req: Request) -> str:
+        """Re-admit an in-flight continuation (a cascade escalation)
+        BYPASSING the backpressure policy: the sample already passed
+        admission and has paid real compute in a smaller member —
+        shedding it now would waste that work AND break the invariant
+        that an admitted request eventually resolves.  Escalation volume
+        is bounded by what admission let in, so this cannot grow a lane
+        unboundedly."""
+        with self._lock:
+            self._lanes.setdefault(req.lane, deque()).append(req)
+        return "queued"
+
     # ------------------------------------------------------------------
     # lane views (all O(lane) worst case; lanes are short)
     # ------------------------------------------------------------------

@@ -1,0 +1,469 @@
+"""repro.cascade: difficulty-routed multi-model cascade serving.
+
+Covers: the escalation gate/prior math against hand-computed values,
+batched cascade inference bit-identical to the per-request oracle
+(masked and compacted), cascade-absolute cost accounting recomputed
+from member curves, the joint cascade DP beating independent
+calibration on its own objective, the async scheduler integration
+(facade dispatch, escalation re-enqueue, partial-escalation future
+assembly, requeue bypassing backpressure, per-lane DAES/stats), and an
+8-fake-device subprocess run asserting sharded-member equivalence plus
+the one-trace-per-(member, bucket) compile guarantee.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import difficulty as DIFF
+from repro.core import policy as POL
+from repro.core.routing import DartParams
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.engine import DartEngine
+from repro.engine.registry import get_optimizer
+from repro.models.vit import ViTConfig, vit_init
+from repro.parallel.sharding import unzip
+from repro.cascade import CascadeEngine, CascadeAsyncServer
+from repro.serving import (AsyncDartServer, RequestQueue, SchedulerConfig)
+from repro.serving.request import Request
+
+DATA = DatasetConfig(name="synth-cifar", n_train=128, n_eval=128)
+
+
+def _make_member(seed, n_layers, d_model, costs):
+    vc = ViTConfig(name=f"casc-vt{seed}", img_res=32, patch=8,
+                   n_layers=n_layers, d_model=d_model, n_heads=2,
+                   d_ff=2 * d_model, n_classes=10,
+                   exit_layers=tuple(range(n_layers - 1)))
+    params, _ = unzip(vit_init(jax.random.key(seed), vc))
+    return DartEngine.from_config(
+        vc, params, cum_costs=costs, adapt=False,
+        dart=DartParams(tau=jnp.full((n_layers - 1,), 0.2),
+                        coef=jnp.ones(n_layers - 1), beta_diff=0.3))
+
+
+@pytest.fixture(scope="module")
+def members():
+    return (_make_member(0, 3, 32, [0.4, 0.7, 1.0]),
+            _make_member(1, 4, 48, [0.3, 0.55, 0.8, 1.0]))
+
+
+@pytest.fixture(scope="module")
+def eval_images():
+    x, _ = make_batch(DATA, range(64), split="eval")
+    return np.asarray(x)
+
+
+def _partial_theta(members, x, beta_esc):
+    """A theta that escalates roughly half the stream — makes the
+    partial-escalation paths (mixed members within one request) real."""
+    small = members[0]
+    alpha = np.asarray(small._alpha(jnp.asarray(x)))
+    out = small.infer(x, mode="masked", record=False, alpha=alpha)
+    margin = np.asarray(out["conf"]) - beta_esc * alpha
+    return float(np.quantile(margin, 0.5))
+
+
+@pytest.fixture(scope="module")
+def cascade(members, eval_images):
+    theta = _partial_theta(members, eval_images, beta_esc=0.1)
+    return CascadeEngine(list(members), member_costs=[0.25, 1.0],
+                         theta=np.array([theta]), beta_esc=0.1)
+
+
+# ---------------------------------------------------------------------------
+# construction + gate math
+# ---------------------------------------------------------------------------
+def test_constructor_validation(members):
+    small, big = members
+    with pytest.raises(ValueError, match="at least 2"):
+        CascadeEngine([small])
+    with pytest.raises(ValueError, match="increasing capacity"):
+        CascadeEngine([small, big], member_costs=[1.0, 0.25])
+    with pytest.raises(ValueError, match="3 costs for 2"):
+        CascadeEngine([small, big], member_costs=[0.25, 0.5, 1.0])
+    with pytest.raises(ValueError, match="theta"):
+        CascadeEngine([small, big], member_costs=[0.25, 1.0],
+                      theta=np.array([0.3, 0.3]))
+    # costs normalize to biggest = 1
+    c = CascadeEngine([small, big], member_costs=[1.0, 4.0])
+    np.testing.assert_allclose(c.member_costs, [0.25, 1.0])
+
+
+def test_escalation_gate_hand_computed():
+    alpha = np.array([0.0, 0.5, 1.0])
+    conf = np.array([0.55, 0.55, 0.55])
+    # eff = clip(0.4 + 0.3*alpha) = [0.4, 0.55, 0.7]; gate is conf <= eff
+    np.testing.assert_array_equal(
+        POL.escalation_gate(0.4, alpha, conf, 0.3),
+        [False, True, True])
+    # sentinels: clip(-1 + .3a) = 0 never catches softmax conf > 0;
+    # clip(1 + .3a) = 1 catches everything
+    assert not POL.escalation_gate(-1.0, alpha, conf, 0.3).any()
+    assert POL.escalation_gate(1.0, alpha, conf, 0.3).all()
+
+
+def test_escalation_prior_hand_computed():
+    a = POL.escalation_alpha(np.array([0.2, 0.8]), np.array([0.9, 0.1]),
+                             prior_weight=0.5)
+    # 0.5*0.2 + 0.5*(1-0.9) = 0.15 ; 0.5*0.8 + 0.5*0.9 = 0.85
+    np.testing.assert_allclose(a, [0.15, 0.85], atol=1e-7)
+    # w=0 keeps the raw alpha, w=1 is pure residual uncertainty
+    np.testing.assert_allclose(
+        POL.escalation_alpha(np.array([0.3]), np.array([0.4]), 0.0), [0.3])
+    np.testing.assert_allclose(
+        POL.escalation_alpha(np.array([0.3]), np.array([0.4]), 1.0), [0.6])
+
+
+def test_theta_sentinels_control_escalation(cascade, eval_images):
+    x = eval_images[:16]
+    never = CascadeEngine(cascade.members, member_costs=[0.25, 1.0],
+                          theta=np.array([-1.0]), beta_esc=0.1)
+    out = never.infer(x)
+    assert (out["member"] == 0).all()
+    always = CascadeEngine(cascade.members, member_costs=[0.25, 1.0],
+                           theta=np.array([1.0]), beta_esc=0.1)
+    out = always.infer(x)
+    assert (out["member"] == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# batched == per-request oracle (the tentpole equivalence)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["masked", "compacted"])
+def test_batched_matches_oracle(cascade, eval_images, mode):
+    out = cascade.infer(eval_images, mode=mode)
+    ref = cascade.infer(eval_images, mode="oracle")
+    # the theta fixture is tuned for a real mix of terminal members
+    assert len(np.unique(ref["member"])) == 2, ref["member"]
+    for k in ("pred", "exit_idx", "member"):
+        np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
+    np.testing.assert_allclose(out["conf"], ref["conf"], atol=2e-5)
+    np.testing.assert_allclose(out["macs"], ref["macs"], atol=1e-9)
+    np.testing.assert_allclose(out["alpha"], ref["alpha"], atol=2e-5)
+
+
+def test_macs_accounting_recomputed(cascade, eval_images):
+    """Cascade macs = every visited member's routed cost in cascade
+    units, recomputed from the member curves."""
+    x = eval_images[:32]
+    out = cascade.infer(x)
+    alpha = np.asarray(cascade._alpha(jnp.asarray(x)))
+    small = cascade.members[0].infer(x, mode="masked", record=False,
+                                     alpha=alpha)
+    cum0 = np.asarray(cascade.members[0].cum_costs, float)
+    cum1 = np.asarray(cascade.members[1].cum_costs, float)
+    want = 0.25 * cum0[np.asarray(small["exit_idx"])] / cum0[-1]
+    esc = out["member"] == 1
+    want[esc] += 1.0 * cum1[out["exit_idx"][esc]] / cum1[-1]
+    np.testing.assert_allclose(out["macs"], want, atol=1e-9)
+    # stats() agrees with the per-sample sum
+    c = CascadeEngine(cascade.members, member_costs=[0.25, 1.0],
+                      theta=cascade.theta, beta_esc=cascade.beta_esc)
+    c.infer(x, record=True)
+    st = c.stats()
+    assert st["admitted"] == 32
+    assert st["escalated"] == [int(esc.sum())]
+    np.testing.assert_allclose(st["total_macs"], out["macs"].sum(),
+                               rtol=1e-6)
+
+
+def test_cum_costs_is_biggest_member_curve(cascade):
+    np.testing.assert_allclose(
+        cascade.cum_costs, np.asarray([0.3, 0.55, 0.8, 1.0]))
+    assert cascade.n_exits == 4
+    # the flush planner's bucket key is conservative across members
+    assert cascade.bucket_key(5) == max(m.bucket_key(5)
+                                        for m in cascade.members)
+
+
+# ---------------------------------------------------------------------------
+# joint cascade DP (tentpole optimizer)
+# ---------------------------------------------------------------------------
+def make_cascade_calibration(seed=0, n=900, member_exits=(3, 4),
+                             member_costs=(0.25, 1.0)):
+    """Synthetic cascade pool: a weak-but-cheap member and a strong one,
+    confidence correlated with correctness, difficulty degrading the
+    small member faster (the regime where escalation pays)."""
+    rs = np.random.RandomState(seed)
+    alpha = rs.rand(n)
+    ms = []
+    for m, e in enumerate(member_exits):
+        top = 0.75 + 0.2 * m           # the big member is simply better
+        skill = np.linspace(0.5, top, e)
+        degrade = (0.45 - 0.2 * m) * alpha[:, None] * (1 - skill[None])
+        p = np.clip(skill[None] - degrade, 0.05, 0.99)
+        correct = (rs.rand(n, e) < p).astype(float)
+        conf = np.clip(0.55 * correct + 0.25 * rs.rand(n, e)
+                       + 0.2 * skill[None], 0, 1)
+        cum = np.linspace(1.0 / e, 1.0, e)
+        ms.append(POL.CalibrationData(conf, correct, alpha, cum,
+                                      labels=rs.randint(0, 10, n)))
+    return POL.CascadeCalibrationData(ms, np.asarray(member_costs))
+
+
+def test_cascade_dp_beats_independent():
+    data = make_cascade_calibration()
+    dp = POL.optimize_cascade_dp(data, beta_opt=0.5)
+    ind = POL.optimize_cascade_independent(data, beta_opt=0.5)
+    assert dp.objective >= ind.objective - 1e-9
+    assert dp.theta.shape == (1,)
+    # the reported objective is exactly the replayed cascade J
+    j = POL.cascade_objective(data, dp.members, dp.theta, beta_opt=0.5,
+                              beta_esc=dp.beta_esc,
+                              prior_weight=dp.prior_weight)
+    np.testing.assert_allclose(dp.objective, j, atol=1e-12)
+    assert dp.method == "cascade_dp"
+    assert len(dp.diagnostics["seed_objectives"]) == 2
+
+
+def test_simulate_cascade_cost_endpoints():
+    data = make_cascade_calibration(n=300)
+    pols = [POL.optimize_joint_dp(d, beta_opt=0.5) for d in data.members]
+    # theta=-1: nobody escalates -> cost is the small member's routed
+    # cost alone, scaled to cascade units
+    sim = POL.simulate_cascade(data, pols, [-1.0])
+    assert (sim["member"] == 0).all()
+    cum = np.asarray(data.members[0].cum_costs)
+    np.testing.assert_allclose(
+        sim["cost"], 0.25 * cum[sim["exit_idx"]] / cum[-1], atol=1e-12)
+    # theta=+1: everybody escalates -> both members pay
+    sim = POL.simulate_cascade(data, pols, [1.0])
+    assert (sim["member"] == 1).all()
+    assert (sim["cost"] > 0.25 / len(cum) - 1e-12).all()
+
+
+def test_optimizer_registry_exposes_cascade():
+    assert get_optimizer("cascade_dp") is POL.optimize_cascade_dp
+    assert get_optimizer("cascade_independent") is \
+        POL.optimize_cascade_independent
+
+
+def test_calibrate_installs_joint_policy(members):
+    cascade = CascadeEngine(list(members), member_costs=[0.25, 1.0],
+                            beta_esc=0.1)
+    cal = cascade.collect_calibration(DATA, n=96, batch=32)
+    assert isinstance(cal, POL.CascadeCalibrationData)
+    np.testing.assert_allclose(cal.members[1].alpha, cal.members[0].alpha)
+    pol = cascade.calibrate(cal, sweeps=1)
+    assert pol.method == "cascade_dp"
+    np.testing.assert_allclose(np.asarray(cascade.theta), pol.theta)
+    for eng, p in zip(cascade.members, pol.members):
+        np.testing.assert_allclose(np.asarray(eng.state.tau), p.tau,
+                                   atol=1e-7)
+    # the installed policy is what batched inference routes with
+    out = cascade.infer(np.asarray(make_batch(DATA, range(16),
+                                              split="eval")[0]))
+    ref = cascade.infer(np.asarray(make_batch(DATA, range(16),
+                                              split="eval")[0]),
+                        mode="oracle")
+    np.testing.assert_array_equal(out["member"], ref["member"])
+    np.testing.assert_array_equal(out["exit_idx"], ref["exit_idx"])
+
+
+# ---------------------------------------------------------------------------
+# async scheduler integration
+# ---------------------------------------------------------------------------
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def test_facade_dispatches_to_cascade_server(cascade, members):
+    srv = AsyncDartServer(cascade, SchedulerConfig(pipeline_depth=0),
+                          start=False)
+    assert type(srv) is CascadeAsyncServer
+    plain = AsyncDartServer(members[0], SchedulerConfig(pipeline_depth=0),
+                            start=False)
+    assert type(plain) is AsyncDartServer
+    srv.close()
+    plain.close()
+
+
+def test_serving_matches_oracle(cascade, eval_images):
+    """Requests served through the scheduler (escalations re-enqueued
+    across members) resolve to the per-request oracle's outputs."""
+    ref = cascade.infer(eval_images[:48], mode="oracle")
+    with AsyncDartServer(cascade, SchedulerConfig(
+            max_batch=16, flush_ms=2.0, pipeline_depth=0)) as srv:
+        futs = [srv.submit(eval_images[i:i + 6]) for i in range(0, 48, 6)]
+        res = [f.result(timeout=120) for f in futs]
+        st = srv.stats()
+        esc = srv.counters.get("escalated", 0)
+    got = {k: np.concatenate([r[k] for r in res])
+           for k in ("pred", "conf", "exit_idx", "member", "macs")}
+    for k in ("pred", "exit_idx", "member"):
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+    np.testing.assert_allclose(got["conf"], ref["conf"], atol=2e-5)
+    np.testing.assert_allclose(got["macs"], ref["macs"], atol=1e-9)
+    assert esc == int((ref["member"] == 1).sum())
+    # per-(terminal member, class) DAES lanes + cascade stats surfaced
+    assert all(isinstance(k, tuple) and len(k) == 2 for k in st["daes"])
+    assert set(m for m, _ in st["daes"]) == set(np.unique(ref["member"]))
+    assert st["admitted"] == 48
+    assert "requests" in st
+
+
+def test_partial_escalation_assembles_one_future(cascade, eval_images):
+    """One request whose samples split across members still resolves as
+    a single future with per-sample member/macs stitched in order."""
+    ref = cascade.infer(eval_images[:48], mode="oracle")
+    mixed = np.concatenate([eval_images[:48][ref["member"] == 0][:3],
+                            eval_images[:48][ref["member"] == 1][:3]])
+    clock = FakeClock()
+    srv = AsyncDartServer(cascade, SchedulerConfig(
+        max_batch=8, flush_ms=1.0, pipeline_depth=0), clock=clock,
+        start=False)
+    fut = srv.submit(mixed)
+    clock.advance(0.01)
+    assert srv.pump()                    # member-0 bucket; escalations
+    assert not fut.done()                # ... leave the future pending
+    assert srv.counters.get("escalated", 0) == 3
+    lanes = srv.queue.keys()
+    assert lanes and all(l[0] == 1 for l in lanes)
+    clock.advance(0.01)
+    assert srv.pump()                    # member-1 bucket resolves it
+    res = fut.result(timeout=5)
+    np.testing.assert_array_equal(res["member"], [0, 0, 0, 1, 1, 1])
+    r2 = cascade.infer(mixed, mode="oracle")
+    np.testing.assert_array_equal(res["pred"], r2["pred"])
+    np.testing.assert_array_equal(res["exit_idx"], r2["exit_idx"])
+    np.testing.assert_allclose(res["macs"], r2["macs"], atol=1e-9)
+    srv.close()
+
+
+def test_requeue_bypasses_backpressure():
+    q = RequestQueue(max_queue=1, policy="reject")
+    from concurrent.futures import Future
+
+    def req(rid):
+        return Request(rid=rid, x=np.zeros((1, 2)), n=1,
+                       alpha=np.zeros(1), lane=(1, 0), predicted_cost=0.1,
+                       priority=0, t_submit=0.0, deadline_s=None,
+                       future=Future())
+    assert q.push(req(0)) == "queued"
+    assert q.push(req(1)) == "rejected"       # lane full
+    assert q.requeue(req(2)) == "queued"      # escalation: always admits
+    assert q.depth((1, 0)) == 2
+
+
+def test_cascade_planner_priors_and_member_choice(cascade):
+    from repro.cascade.serving import CascadePlanner
+    pl = CascadePlanner(cascade, edges=(0.35, 0.65))
+    # cold start: optimistic, smallest member for every class
+    assert [pl.choose_member(c) for c in range(3)] == [0, 0, 0]
+    # a class observed to always escalate routes straight to the big one
+    pl.observe_escalation(0, 2, np.ones(8, bool))
+    assert pl.choose_member(2) == 1
+    assert pl.choose_member(0) == 0
+    pr = pl.priors()
+    assert pr["escalation"] == [[None, None, 1.0]]
+    assert len(pr["depth"]) == 2
+    # predicted cost from the big member is just its own depth prior
+    a = 0.9
+    want = 1.0 * pl.members[1].predicted_cost(a, 2)
+    np.testing.assert_allclose(pl.predicted_cost(1, a, 2), want)
+    # from the small member it adds the escalation-weighted big cost
+    want0 = 0.25 * pl.members[0].predicted_cost(a, 2) \
+        + 1.0 * 1.0 * pl.members[1].predicted_cost(a, 2)
+    np.testing.assert_allclose(pl.predicted_cost(0, a, 2), want0)
+
+
+def test_default_edges_single_source(members):
+    """Satellite: (0.35, 0.65) lives in ONE place — core.difficulty."""
+    from repro.cascade.serving import CascadePlanner
+    from repro.serving.planner import AdmissionPlanner
+    assert DIFF.DEFAULT_EDGES == (0.35, 0.65)
+    assert tuple(AdmissionPlanner(members[0]).edges) == DIFF.DEFAULT_EDGES
+    assert SchedulerConfig().edges == DIFF.DEFAULT_EDGES
+    casc = CascadeEngine(list(members), member_costs=[0.25, 1.0])
+    assert tuple(CascadePlanner(casc).edges) == DIFF.DEFAULT_EDGES
+
+
+# ---------------------------------------------------------------------------
+# sharded members on 8 fake devices (subprocess)
+# ---------------------------------------------------------------------------
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.routing import DartParams
+    from repro.data.datasets import DatasetConfig, make_batch
+    from repro.engine import DartEngine
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.vit import ViTConfig, vit_init
+    from repro.parallel.sharding import unzip
+    from repro.cascade import CascadeEngine
+
+    DATA = DatasetConfig(name="synth-cifar", n_train=128, n_eval=128)
+    mesh = make_serving_mesh()
+
+    def member(seed, n_layers, d_model, costs):
+        vc = ViTConfig(name=f"casc-sh{seed}", img_res=32, patch=8,
+                       n_layers=n_layers, d_model=d_model, n_heads=2,
+                       d_ff=2 * d_model, n_classes=10,
+                       exit_layers=tuple(range(n_layers - 1)))
+        params, _ = unzip(vit_init(jax.random.key(seed), vc))
+        return DartEngine.from_config(
+            vc, params, mesh=mesh, cum_costs=costs, adapt=False,
+            dart=DartParams(tau=jnp.full((n_layers - 1,), 0.2),
+                            coef=jnp.ones(n_layers - 1), beta_diff=0.3))
+
+    small = member(0, 3, 32, [0.4, 0.7, 1.0])
+    big = member(1, 4, 48, [0.3, 0.55, 0.8, 1.0])
+    assert small.n_replicas == big.n_replicas == 8
+
+    x, _ = make_batch(DATA, range(48), split="eval")
+    x = np.asarray(x)
+    # pick a theta that splits the stream across members
+    alpha = np.asarray(small._alpha(jnp.asarray(x)))
+    probe = small.infer(x, mode="eager", alpha=alpha)
+    theta = float(np.quantile(np.asarray(probe["conf"])
+                              - 0.1 * alpha, 0.5))
+    casc = CascadeEngine([small, big], member_costs=[0.25, 1.0],
+                         theta=np.array([theta]), beta_esc=0.1)
+
+    ref = casc.infer(x, mode="oracle")
+    assert len(np.unique(ref["member"])) == 2, ref["member"]
+    for mode in ("masked", "compacted"):
+        out = casc.infer(x, mode=mode)
+        for k in ("pred", "exit_idx", "member"):
+            np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
+        np.testing.assert_allclose(out["conf"], ref["conf"], rtol=2e-5,
+                                   atol=2e-5)
+        np.testing.assert_allclose(out["macs"], ref["macs"], rtol=2e-5,
+                                   atol=2e-5)
+
+    # one trace per (member, stage, bucket) even with 8 replicas and
+    # varying batch shapes
+    for n in (3, 17, 48):
+        casc.infer(x[:n], mode="masked")
+    tc = casc.trace_counts
+    assert tc, "sharded members must record traces"
+    assert all(v == 1 for v in tc.values()), tc
+    assert set(k[0] for k in tc) <= {0, 1}, tc
+    print("CASCADE_SHARDED_OK")
+""" % os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_sharded_cascade_on_8_devices():
+    """Batched == oracle on sharded members + the per-(member, bucket)
+    single-trace guarantee, on an 8-fake-device mesh (subprocess)."""
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "CASCADE_SHARDED_OK" in r.stdout
