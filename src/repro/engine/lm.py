@@ -57,7 +57,8 @@ from repro.core import thresholds as TH
 from repro.core.routing import DartParams
 from repro.engine import registry as REG
 from repro.engine import state as ST
-from repro.engine.compactor import BatchCompactor
+from repro.engine.compactor import (BatchCompactor, OutOfCapacity,
+                                    PageAllocator, SlotPool)
 from repro.engine.state import EngineState
 from repro.models import layers as L
 from repro.models import transformer_lm as TLM
@@ -89,6 +90,49 @@ def _stage_apply(params, x, cache_sl, cache_index, *, cfg, a, b):
         else:
             att, c = L.gqa_decode(p["attn"], h, cos, sin,
                                   cache_sl[j], cache_index)
+        new_sl.append(c)
+        x = x + att
+        h2 = L.rmsnorm(p["ffn_norm"], x)
+        if cfg.layer_is_moe(i):
+            from repro.models.moe import moe_apply
+            f, _ = moe_apply(p["moe"], h2, cfg.moe, ep_mode=cfg.moe_ep_mode)
+        else:
+            f = L.swiglu(p["ffn"], h2)
+        x = x + f
+    return x, new_sl
+
+
+def _stage_apply_paged(params, x, pages_sl, page_table, page_idx, offset,
+                       positions, *, cfg, a, b, gather_kw=None):
+    """Run layers [a, b) for one decode position against the PAGED KV
+    store — the continuous-batching mirror of :func:`_stage_apply`.
+
+    x: (S, 1, D) — the full slot pool; ``positions`` is per-slot, so
+    rows at different depths coexist in one launch.  ``page_idx`` is the
+    write page per slot (out-of-range for rows that must not write) and
+    ``page_table`` the read indirection; the per-layer math is the same
+    functions the contiguous path uses, so values are bit-identical at
+    equal padded view length."""
+    psz = (pages_sl[0]["c_kv"] if cfg.attn_kind == "mla"
+           else pages_sl[0]["k"]).shape[1]
+    view_len = page_table.shape[1] * psz
+    cos, sin = L.rope_freqs(
+        cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
+        view_len, cfg.rope_theta)
+    new_sl = []
+    for j, i in enumerate(range(a, b)):
+        p = params["layers"][i]
+        h = L.rmsnorm(p["attn_norm"], x)
+        if cfg.attn_kind == "mla":
+            att, c = L.mla_decode_paged(p["attn"], h, cos, sin,
+                                        pages_sl[j], page_table, page_idx,
+                                        offset, positions,
+                                        gather_kw=gather_kw)
+        else:
+            att, c = L.gqa_decode_paged(p["attn"], h, cos, sin,
+                                        pages_sl[j], page_table, page_idx,
+                                        offset, positions,
+                                        gather_kw=gather_kw)
         new_sl.append(c)
         x = x + att
         h2 = L.rmsnorm(p["ffn_norm"], x)
@@ -186,6 +230,7 @@ class LMDecodeEngine:
             for _, b in self.stages]
         self._embed = jax.jit(lambda params, t: L.embed(
             params["embed"], t).astype(cfgc.compute_dtype))
+        self._cont_default = None  # lazy decoder for generate("continuous")
 
     # ------------------------------------------------------------------
     @property
@@ -201,13 +246,30 @@ class LMDecodeEngine:
         shape."""
         return self.compactor.padded_size(n, self.replica_multiple)
 
-    def session(self, cfg=None, **kw):
+    def session(self, cfg=None, *, continuous: bool = False, **kw):
         """Queue-backed session handle: drive this decode engine through
         the async scheduler (deadlines, priorities, consolidation of
         concurrent ``generate`` callers into shared bucketed decode
-        loops).  See :class:`repro.serving.LMDecodeSession`."""
-        from repro.serving.lm_session import LMDecodeSession
+        loops).  ``continuous=True`` returns the slot-refill session
+        over a :class:`ContinuousLMDecoder` instead (requests stream
+        through the slot pool; no bucket flushes).  See
+        :class:`repro.serving.LMDecodeSession` /
+        :class:`repro.serving.lm_session.LMContinuousSession`."""
+        from repro.serving.lm_session import (LMContinuousSession,
+                                              LMDecodeSession)
+        if continuous:
+            return LMContinuousSession(self, cfg=cfg, **kw)
         return LMDecodeSession(self, cfg=cfg, **kw)
+
+    def continuous(self, n_slots=None, page_size=8, max_len=None):
+        """A slot-based continuous-batching decoder over a paged KV
+        cache (ISSUE 7 tentpole).  Each call returns a fresh
+        :class:`ContinuousLMDecoder` (its slot pool and page store are
+        private mutable serving state); compiled steps are cached on
+        the ENGINE keyed by pool geometry, so decoders of the same
+        shape share traces."""
+        return ContinuousLMDecoder(self, n_slots=n_slots,
+                                   page_size=page_size, max_len=max_len)
 
     # ------------------------------------------------------------------
     # state round-trip (same machinery as DartEngine)
@@ -244,7 +306,11 @@ class LMDecodeEngine:
                "mean_macs": float(tel["total_macs"]) / max(served, 1),
                "layers_run": self.layers_run,
                "layers_skipped": self.layers_skipped,
-               "replicas": self.n_replicas}
+               "replicas": self.n_replicas,
+               "continuous": {
+                   "slot_steps": int(tel["slot_steps"]),
+                   "decode_steps": int(tel["decode_steps"]),
+                   "pages_peak": int(np.asarray(self.state.pages_peak))}}
         req = ST.request_stats(self.state)
         if req["requests"]:
             out["requests"] = req
@@ -536,6 +602,20 @@ class LMDecodeEngine:
             + n_new.astype(jnp.float32) * float(self.cum_costs[s]),
             since_update=state.since_update + n_new)
 
+    def _fold_decode_dense(self, state: EngineState, s: int,
+                           fire) -> EngineState:
+        """Telemetry fold against an UNSHARDED state (scalar counters,
+        (E,) exit_counts) — the continuous decoder's mesh-less twin of
+        :meth:`_fold_decode`."""
+        n_new = jnp.sum(fire.astype(jnp.int32))
+        return dataclasses.replace(
+            state,
+            served=state.served + n_new,
+            exit_counts=state.exit_counts.at[s].add(n_new),
+            total_macs=state.total_macs
+            + n_new.astype(jnp.float32) * float(self.cum_costs[s]),
+            since_update=state.since_update + n_new)
+
     # ------------------------------------------------------------------
     # generation
     # ------------------------------------------------------------------
@@ -546,18 +626,26 @@ class LMDecodeEngine:
 
         mode — "sharded" (default when built with ``mesh=``): the fused
         donated-cache compiled decode loop; "eager": the per-stage
-        oracle path (never records telemetry on a sharded engine).
-        Batches larger than the biggest bucket are split into chunks
-        (each chunk gets its own KV cache)."""
+        oracle path (never records telemetry on a sharded engine);
+        "continuous": the slot-pool continuous-batching decoder over
+        the paged KV cache (rows admitted as slots free up — no bucket
+        flushes, ONE compiled decode step for every admission
+        pattern).  Batches larger than the biggest bucket are split
+        into chunks (each chunk gets its own KV cache); the continuous
+        path instead streams rows through the slot pool."""
         if mode is None:
             mode = "sharded" if self.mesh is not None else "eager"
-        if mode not in ("sharded", "eager"):
+        if mode not in ("sharded", "eager", "continuous"):
             raise ValueError(
-                f"unknown mode {mode!r}; known: sharded, eager")
+                f"unknown mode {mode!r}; known: sharded, eager, "
+                "continuous")
         if mode == "sharded" and self.mesh is None:
             raise ValueError(
                 "mode='sharded' needs a mesh — construct with "
                 "LMDecodeEngine(..., mesh=make_serving_mesh())")
+        if mode == "continuous":
+            return self._generate_continuous(np.asarray(prompt_tokens),
+                                             n_new)
         b, s0 = prompt_tokens.shape
         if b > self.compactor.max_bucket:
             outs, stgs = [], []
@@ -636,3 +724,486 @@ class LMDecodeEngine:
             out.append(np.asarray(toks)[:b].astype(np.int64))
             stages_out.append(np.asarray(stg)[:b].astype(np.int64))
         return np.stack(out, 1), np.stack(stages_out, 1)
+
+    def _generate_continuous(self, prompts, n_new):
+        """Drive the (engine-owned) default continuous decoder: admit
+        each prompt row as its own request whenever the slot pool has
+        room, step until every row finished.  Rows at different depths
+        coexist in one launch, so a large batch streams through
+        ``n_slots`` slots without bucket flushes."""
+        b, s0 = prompts.shape
+        if self._cont_default is None:
+            self._cont_default = self.continuous()
+        dec = self._cont_default
+        if not dec.fits_ever(1, s0, n_new):
+            raise ValueError(
+                f"prompt_len={s0} + n_new={n_new} exceeds the default "
+                f"continuous decoder's max_len={dec.max_len}; build one "
+                "via engine.continuous(max_len=...) and admit directly")
+        out_t: list = [None] * b
+        out_s: list = [None] * b
+        pending = list(range(b))
+        done = 0
+        while done < b:
+            while pending and dec.can_admit(1, s0, n_new):
+                i = pending.pop(0)
+                dec.admit(prompts[i:i + 1], n_new, tag=("gen", i))
+            if not dec.active_rows:
+                raise RuntimeError("continuous generate stalled with "
+                                   "pending rows and an empty pool")
+            for tag, toks, stgs in dec.step():
+                if isinstance(tag, tuple) and tag[0] == "gen":
+                    out_t[tag[1]] = toks[0]
+                    out_s[tag[1]] = stgs[0]
+                    done += 1
+        return np.stack(out_t), np.stack(out_s)
+
+
+class ContinuousLMDecoder:
+    """Slot-based continuous batching over a paged KV cache.
+
+        dec = engine.continuous(n_slots=8, page_size=8, max_len=64)
+        dec.admit(prompts, n_new=12, tag="req-0")   # any step
+        events = dec.step()   # [(tag, tokens (B, n), stages (B, n))]
+
+    ONE fixed-shape compiled decode step serves the whole pool: an
+    active-mask plus per-slot position counter lets rows at different
+    depths (and different requests) coexist in a single launch, so
+    admission never retraces — ``trace_counts`` stays at one
+    ``("lm-cont-decode", ...)`` entry for every admission pattern.
+
+    KV lives in a page store (n_pages, page_size, ...) per layer with a
+    free-list :class:`PageAllocator`; each slot reads through its row of
+    the page table (a ``kernels.dispatch``-routed gather) and writes
+    through a per-slot (page, offset) scatter.  A row that fires its
+    exit gate stops writing KV *within the same launch* (its write page
+    index goes out of range → dropped), and a finished request frees its
+    slot and pages to the admission queue THAT step — Alg. 1 early
+    termination is what creates serving capacity.
+
+    Bit-identity: the per-layer math is the same functions the eager
+    oracle uses, and masked-out view positions contribute exact zeros,
+    so tokens AND exit stages match ``generate(mode="eager",
+    max_len=dec.view_len)`` row for row (dense configs — the MoE caveat
+    from the module docstring applies).
+
+    Under a mesh, slots and pages are sharded over the data axis and the
+    allocator keeps slot s's pages inside slot s's replica range, so the
+    Pallas gather's shard_map sees local page ids.
+    """
+
+    def __init__(self, engine: LMDecodeEngine, *, n_slots=None,
+                 page_size=8, max_len=None):
+        from repro.engine.sharded import _silence_donation_warning
+        _silence_donation_warning()
+        self.eng = engine
+        cfg = engine.cfg
+        if engine.mesh is None and not getattr(engine, "_state_owned",
+                                               False):
+            # the continuous step DONATES the engine state — on a
+            # mesh-less engine its leaves may still alias the caller's
+            # DartParams (or a sibling engine built from them); take
+            # ownership before the first donation, like the sharded
+            # constructor does
+            engine.state = jax.tree.map(
+                lambda a: jnp.array(a, copy=True), engine.state)
+            engine._state_owned = True
+        if max_len is None:
+            max_len = cfg.max_seq
+        if n_slots is None:
+            n_slots = max(min(16, engine.compactor.max_bucket),
+                          engine.replica_multiple)
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if n_slots % engine.replica_multiple:
+            raise ValueError(
+                f"n_slots={n_slots} not a multiple of the replica "
+                f"multiple {engine.replica_multiple}")
+        self.n_slots = int(n_slots)
+        self.page_size = int(page_size)
+        self.max_len = int(max_len)
+        self.pages_per_slot = -(-self.max_len // self.page_size)
+        #: dense attention view length (page-table width × page size);
+        #: the eager oracle must be run at THIS max_len for bit-identity
+        self.view_len = self.pages_per_slot * self.page_size
+        self.n_pages = self.n_slots * self.pages_per_slot
+        self.pool = SlotPool(self.n_slots, engine.n_replicas)
+        self.allocator = PageAllocator(self.n_pages, engine.n_replicas)
+
+        # device state: per-layer page stores + the Eq. 8 difficulty EMA
+        self.pages = TLM.lm_init_cache(cfg, self.n_pages, self.page_size)
+        self.alpha = jnp.full((self.n_slots,), 0.5, jnp.float32)
+        if engine.mesh is not None:
+            self.pages = jax.device_put(self.pages, engine._row)
+            self.alpha = jax.device_put(self.alpha, engine._row)
+
+        # host bookkeeping (numpy; shipped into each step as operands)
+        s = self.n_slots
+        self.pos = np.zeros(s, np.int32)        # next KV write position
+        self.active = np.zeros(s, np.int32)
+        self.fresh = np.zeros(s, np.int32)      # reset EMA to 0.5
+        self.tokens = np.zeros(s, np.int32)     # last emitted token
+        self.page_table = np.zeros((s, self.pages_per_slot), np.int32)
+        self._requests: dict = {}               # rid -> record
+        self._slot_req: dict = {}               # slot -> (rid, row)
+        self._slot_pages: dict = {}             # slot -> [page ids]
+        self._next_rid = 0
+        self._pages_hwm = 0
+
+    # -- admission ------------------------------------------------------
+    @property
+    def active_rows(self) -> int:
+        return int(self.active.sum())
+
+    def pages_needed(self, s0: int, n_new: int) -> int:
+        """Pages reserved up-front at admission: the last KV position a
+        request writes is ``s0 + n_new - 2`` (the final generated
+        token's step reads the cache but its own KV write is the one
+        that would serve step n_new+1)."""
+        return max(1, -(-(s0 + n_new - 1) // self.page_size))
+
+    def fits_ever(self, n_rows: int, s0: int, n_new: int) -> bool:
+        """Could this request EVER be admitted (even into an empty
+        pool)?  Sessions reject impossible requests instead of queueing
+        them forever."""
+        return (n_rows <= self.n_slots
+                and self.pages_needed(s0, n_new) <= self.pages_per_slot)
+
+    def _placement(self, n_rows: int, npg: int):
+        """First-fit of ``n_rows`` (slot + npg pages each) into replica
+        ranges — a slot's pages always come from its own range, so
+        sharded gathers stay local.  None if it doesn't fit now."""
+        r = self.eng.n_replicas
+        slots = [self.pool.available(i) for i in range(r)]
+        pages = [self.allocator.available(i) for i in range(r)]
+        plan = []
+        for _ in range(n_rows):
+            for i in range(r):
+                if slots[i] and pages[i] >= npg:
+                    plan.append(i)
+                    slots[i] -= 1
+                    pages[i] -= npg
+                    break
+            else:
+                return None
+        return plan
+
+    def can_admit(self, n_rows: int, s0: int, n_new: int) -> bool:
+        if not self.fits_ever(n_rows, s0, n_new):
+            return False
+        return self._placement(n_rows,
+                               self.pages_needed(s0, n_new)) is not None
+
+    def admit(self, prompt_tokens, n_new: int, tag=None):
+        """Admit one request (B rows, shared prompt length / n_new).
+        All-or-nothing: raises :class:`OutOfCapacity` when the pool
+        can't place every row right now.  Prompts prefill straight into
+        the request's own pages; decode joins the pool next step."""
+        prompts = np.asarray(prompt_tokens)
+        b, s0 = prompts.shape
+        if n_new < 1:
+            raise ValueError("n_new must be >= 1")
+        if not self.fits_ever(b, s0, n_new):
+            raise ValueError(
+                f"request (rows={b}, s0={s0}, n_new={n_new}) can never "
+                f"fit this decoder (n_slots={self.n_slots}, "
+                f"max_len={self.max_len})")
+        npg = self.pages_needed(s0, n_new)
+        plan = self._placement(b, npg)
+        if plan is None:
+            raise OutOfCapacity(
+                f"pool full: rows={b} x pages={npg} don't fit "
+                f"({self.pool.in_use}/{self.n_slots} slots, "
+                f"{self.allocator.in_use}/{self.n_pages} pages in use)")
+        rid = self._next_rid
+        self._next_rid += 1
+        rec = {"rid": rid, "tag": rid if tag is None else tag,
+               "slots": [], "remaining": int(n_new),
+               "toks": [[] for _ in range(b)],
+               "stgs": [[] for _ in range(b)]}
+        for row in range(b):
+            slot = self.pool.acquire(plan[row])
+            pg = self.allocator.alloc(npg, plan[row])
+            self._slot_pages[slot] = pg
+            self._slot_req[slot] = (rid, row)
+            rec["slots"].append(slot)
+            self.page_table[slot, :] = 0
+            self.page_table[slot, :npg] = pg
+            self.pos[slot] = s0 - 1
+            self.tokens[slot] = int(prompts[row, -1])
+            self.active[slot] = 1
+            self.fresh[slot] = 1
+            if s0 > 1:
+                self._prefill_row(prompts[row, :-1], pg)
+        self._requests[rid] = rec
+        self._pages_hwm = max(self._pages_hwm, self.allocator.in_use)
+        st = self.eng.state
+        if self._pages_hwm > int(np.asarray(st.pages_peak)):
+            peak = jnp.asarray(self._pages_hwm, jnp.int32)
+            if self.eng.mesh is not None:
+                peak = jax.device_put(peak, self.eng._repl)
+            self.eng.state = dataclasses.replace(st, pages_peak=peak)
+        return rec["tag"]
+
+    def release(self, tag) -> bool:
+        """Cancel an in-flight request mid-cascade: frees its slots and
+        KV pages immediately (no completion event is emitted)."""
+        for rid, rec in list(self._requests.items()):
+            if rec["tag"] == tag or rid == tag:
+                self._release_slots(rec["slots"])
+                del self._requests[rid]
+                return True
+        return False
+
+    def _release_slots(self, slots) -> None:
+        for slot in slots:
+            self.allocator.free(self._slot_pages.pop(slot))
+            self.pool.release(slot)
+            del self._slot_req[slot]
+            self.active[slot] = 0
+            self.fresh[slot] = 0
+            self.pos[slot] = 0
+            self.tokens[slot] = 0
+            self.page_table[slot, :] = 0
+
+    # -- compiled steps (cached on the engine, keyed by geometry) -------
+    def _prefill_row(self, prompt, pg) -> None:
+        plen = int(prompt.shape[0])
+        npre = -(-plen // self.page_size)
+        step = self._prefill_step(plen, npre)
+        self.pages = step(self.eng.params,
+                          jnp.asarray(prompt[None, :], jnp.int32),
+                          self.pages,
+                          jnp.asarray(np.asarray(pg[:npre], np.int32)))
+
+    def _prefill_step(self, plen: int, npre: int):
+        """Prefill one row into its reserved pages: the SAME
+        ``lm_prefill`` as the oracle into a temporary dense cache,
+        reshaped to (npre, psz, ...) page rows and scattered at the
+        row's page ids (donated page store)."""
+        eng = self.eng
+        key = ("lm-cont-prefill", plen, npre, self.page_size)
+        if key in eng._steps:
+            return eng._steps[key]
+        cfg = eng.cfg
+        psz = self.page_size
+
+        def step(params, tokens, pages, page_ids):
+            eng._count_trace(key)
+            tmp = TLM.lm_init_cache(cfg, 1, npre * psz)
+            tmp, _ = TLM.lm_prefill(params, tokens, cfg, tmp)
+            pages = list(pages)
+            for i in range(cfg.n_layers):
+                pg = dict(pages[i])
+                for name, leaf in tmp[i].items():
+                    rows = leaf[0].reshape((npre, psz) + leaf.shape[2:])
+                    pg[name] = pg[name].at[page_ids].set(
+                        rows.astype(pg[name].dtype))
+                pages[i] = pg
+            return pages
+
+        kw = {} if eng.mesh is None else {"out_shardings": eng._row}
+        eng._steps[key] = jax.jit(step, donate_argnums=(2,), **kw)
+        return eng._steps[key]
+
+    def _embed_step(self):
+        """Embed + fresh-slot EMA reset + Eq. 8 decode-time difficulty
+        EMA for the whole pool (donates the EMA buffer)."""
+        eng = self.eng
+        key = ("lm-cont-embed", self.n_slots)
+        if key in eng._steps:
+            return eng._steps[key]
+        cfg = eng.cfg
+
+        def step(params, toks, alpha, fresh):
+            eng._count_trace(key)
+            x = L.embed(params["embed"],
+                        toks[:, None]).astype(cfg.compute_dtype)
+            alpha = jnp.where(fresh > 0, jnp.float32(0.5), alpha)
+            alpha = DIFF.token_difficulty_ema(alpha, x)
+            return x, alpha
+
+        kw = {} if eng.mesh is None else {"out_shardings": eng._row}
+        eng._steps[key] = jax.jit(step, donate_argnums=(2,), **kw)
+        return eng._steps[key]
+
+    def _decode_step(self):
+        """THE continuous decode step: every stage for every slot in one
+        fixed-shape launch.  ``run`` masks inactive slots and rows that
+        fired at an earlier stage this step (their KV write page goes
+        out of range → scatter-dropped; their recorded token/stage stop
+        updating), so one trace serves every admission pattern, every
+        depth mix, every survivor count."""
+        eng = self.eng
+        key = ("lm-cont-decode", self.n_slots, self.page_size,
+               self.pages_per_slot)
+        if key in eng._steps:
+            return eng._steps[key]
+        cfg = eng.cfg
+        psz = self.page_size
+        n_pages = self.n_pages
+        view_len = self.view_len
+        n_layers = cfg.n_layers
+        stages = eng.stages
+        final_s = len(stages) - 1
+        gather_kw = eng.kernel_kw
+        fold = eng._fold_decode if eng.mesh is not None \
+            else eng._fold_decode_dense
+
+        def step(params, state, pages, x, alpha, pos, active, page_table):
+            eng._count_trace(key)
+            s_pool = pos.shape[0]
+            run = active > 0
+            page_w = jnp.take_along_axis(
+                page_table, (pos // psz)[:, None], axis=1)[:, 0]
+            off = pos % psz
+            toks_out = jnp.zeros((s_pool,), jnp.int32)
+            stg_out = jnp.zeros((s_pool,), jnp.int32)
+            pages = list(pages)
+            for s, (a, bnd) in enumerate(stages):
+                final = s == final_s
+                pidx = jnp.where(run, page_w, n_pages)  # OOB -> no write
+                x, new_sl = _stage_apply_paged(
+                    params, x, [pages[i] for i in range(a, bnd)],
+                    page_table, pidx, off, pos,
+                    cfg=cfg, a=a, b=bnd, gather_kw=gather_kw)
+                for j, i in enumerate(range(a, bnd)):
+                    pages[i] = new_sl[j]
+                if final:
+                    # Alg. 1 line 12: the final head always accepts
+                    eff = jnp.full((s_pool,), -1.0, jnp.float32)
+                else:
+                    eff = TH.stage_threshold(state.tau[s], state.coef[s],
+                                             alpha, state.beta_diff)
+                conf, pred, fire = eng._head_traced(
+                    params, x[:, 0], eng.exit_names[s], eff)
+                fire = run if final else (fire & run)
+                toks_out = jnp.where(fire, pred.astype(jnp.int32),
+                                     toks_out)
+                stg_out = jnp.where(fire, jnp.int32(s), stg_out)
+                if not final:
+                    # CALM propagation for the fired rows, scattered at
+                    # their (page, offset) for layers [bnd, n_layers)
+                    rows = TLM.lm_kv_project(params, x[:, 0], cfg, None,
+                                             None, bnd, positions=pos,
+                                             max_len=view_len)
+                    pidx_f = jnp.where(fire, page_w, n_pages)
+                    for i, rr in zip(range(bnd, n_layers), rows):
+                        pg = dict(pages[i])
+                        for name, val in rr.items():
+                            pg[name] = pg[name].at[pidx_f, off].set(
+                                val[:, 0].astype(pg[name].dtype),
+                                mode="drop")
+                        pages[i] = pg
+                state = fold(state, s, fire)
+                run = run & ~fire
+            state = self._fold_slots(state, active)
+            return state, (pages, toks_out, stg_out)
+
+        kw = {} if eng.mesh is None \
+            else {"out_shardings": (eng._state_sh, eng._row)}
+        eng._steps[key] = jax.jit(step, donate_argnums=(1, 2, 3), **kw)
+        return eng._steps[key]
+
+    def _fold_slots(self, state: EngineState, active) -> EngineState:
+        """Continuous-batching occupancy telemetry, folded on device
+        inside the step (per replica when sharded; decode_steps counts
+        launches once, on replica 0)."""
+        eng = self.eng
+        occ_all = (active > 0).astype(jnp.int32)
+        if eng.mesh is None:
+            return dataclasses.replace(
+                state,
+                slot_steps=state.slot_steps + occ_all.sum(),
+                decode_steps=state.decode_steps + 1)
+        r = eng.n_replicas
+        occ = occ_all.reshape(r, occ_all.shape[0] // r).sum(1)
+        one = jnp.zeros((r,), jnp.int32).at[0].add(1)
+        return dataclasses.replace(
+            state,
+            slot_steps=state.slot_steps + occ,
+            decode_steps=state.decode_steps + one)
+
+    # -- the step -------------------------------------------------------
+    def step(self):
+        """Advance every active slot one token.  Returns completion
+        events ``[(tag, tokens (B, n_new), stages (B, n_new)), ...]``;
+        finished requests free their slots and KV pages before this
+        returns, so the capacity is admittable immediately."""
+        eng = self.eng
+        if not self.active.any():
+            return []
+        x, self.alpha = self._embed_step()(
+            eng.params, jnp.asarray(self.tokens), self.alpha,
+            jnp.asarray(self.fresh))
+        self.fresh[:] = 0
+        eng.state, (self.pages, toks_out, stg_out) = self._decode_step()(
+            eng.params, eng.state, self.pages, x, self.alpha,
+            jnp.asarray(self.pos), jnp.asarray(self.active),
+            jnp.asarray(self.page_table))
+        tok_np = np.asarray(toks_out)   # the ONE host sync per step
+        stg_np = np.asarray(stg_out)
+        events = []
+        finished = []
+        stepped: set = set()
+        for slot in np.nonzero(self.active)[0]:
+            slot = int(slot)
+            rid, row = self._slot_req[slot]
+            rec = self._requests[rid]
+            rec["toks"][row].append(int(tok_np[slot]))
+            rec["stgs"][row].append(int(stg_np[slot]))
+            self.pos[slot] += 1
+            self.tokens[slot] = int(tok_np[slot])
+            # host diagnostics use the same semantic accounting as the
+            # eager engine: layers a token needed vs skipped
+            st = int(stg_np[slot])
+            bnd = eng.stages[st][1]
+            eng.stats_exit[st] += 1
+            eng.layers_run += bnd
+            eng.layers_skipped += eng.cfg.n_layers - bnd
+            if rid not in stepped:
+                stepped.add(rid)
+                rec["remaining"] -= 1
+                if rec["remaining"] == 0:
+                    finished.append(rid)
+        for rid in finished:
+            rec = self._requests.pop(rid)
+            self._release_slots(rec["slots"])
+            events.append((rec["tag"],
+                           np.asarray(rec["toks"], np.int64),
+                           np.asarray(rec["stgs"], np.int64)))
+        return events
+
+    # -- introspection --------------------------------------------------
+    def stats(self) -> dict:
+        return {"n_slots": self.n_slots,
+                "active": self.active_rows,
+                "page_size": self.page_size,
+                "pages_total": self.n_pages,
+                "pages_in_use": self.allocator.in_use,
+                "pages_peak": self._pages_hwm}
+
+    def check_invariants(self) -> None:
+        """Assert the slot-pool/page-table/free-list consistency the
+        property harness leans on: active-mask ↔ ownership agreement,
+        no page shared between slots, every non-held page on a free
+        list, per-replica placement."""
+        active_slots = {int(s) for s in np.nonzero(self.active)[0]}
+        assert active_slots == set(self._slot_req), \
+            (active_slots, set(self._slot_req))
+        assert active_slots == self.pool._held
+        used = []
+        for slot in active_slots:
+            pg = self._slot_pages[slot]
+            used.extend(pg)
+            assert list(self.page_table[slot, :len(pg)]) == list(pg)
+            rng = self.pool.range_of(slot)
+            assert all(p // self.allocator.per_range == rng for p in pg)
+        assert len(used) == len(set(used)), "page double-booked"
+        assert set(used) == self.allocator._held
+        n_free = sum(self.allocator.available(i)
+                     for i in range(self.allocator.n_ranges))
+        assert n_free + len(used) == self.n_pages
+        s_free = sum(self.pool.available(i)
+                     for i in range(self.pool.n_ranges))
+        assert s_free + len(active_slots) == self.n_slots

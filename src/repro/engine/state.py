@@ -24,14 +24,21 @@ from repro.core.routing import DartParams
 
 _FIELDS = ("tau", "coef", "beta_diff", "beta_opt", "adaptive",
            "served", "exit_counts", "total_macs", "since_update",
-           "lat_ms", "lat_ptr", "lat_count", "deadline_miss")
+           "lat_ms", "lat_ptr", "lat_count", "deadline_miss",
+           "slot_steps", "decode_steps", "pages_peak")
 
-#: The pre-latency-telemetry field set.  The four latency leaves were
-#: APPENDED to ``_FIELDS``, so a checkpoint written before they existed
-#: is a strict prefix of the new flatten order — ``DartEngine.
-#: restore_state`` uses this to migrate old checkpoints (restored
-#: legacy fields + fresh latency counters).
-LEGACY_FIELDS = _FIELDS[:-4]
+#: The pre-latency-telemetry field set.  New telemetry leaves are only
+#: ever APPENDED to ``_FIELDS``, so every older checkpoint is a strict
+#: prefix of the current flatten order — ``restore_with_migration``
+#: walks ``_LAYOUT_PREFIXES`` newest-first (restored prefix fields +
+#: fresh values for the rest).
+LEGACY_FIELDS = _FIELDS[:-7]
+
+#: Known historical flatten orders, newest first: the latency-telemetry
+#: era (PRs 4-6, before the continuous-batching slot/page counters) and
+#: the pre-latency era.  Trying the longer prefix first is what keeps a
+#: latency-era checkpoint from silently dropping its latency window.
+_LAYOUT_PREFIXES = (_FIELDS[:-3], LEGACY_FIELDS)
 
 #: Default size of the per-request latency ring buffer (requests, not
 #: samples — sized for percentile stability, not history).
@@ -56,6 +63,13 @@ class EngineState:
     lat_ptr:      () int32 — latency ring write cursor
     lat_count:    () int32 — requests completed (lifetime)
     deadline_miss: () int32 — requests completed past their deadline
+    slot_steps:   () int32 — continuous batching: occupied slot-steps
+                  (sum over decode steps of active slots; folded on
+                  device inside the compiled step)
+    decode_steps: () int32 — continuous batching: compiled decode-step
+                  launches
+    pages_peak:   () int32 — continuous batching: peak KV pages in use
+                  (host-written at admission, like the latency window)
     """
     tau: jnp.ndarray
     coef: jnp.ndarray
@@ -70,6 +84,9 @@ class EngineState:
     lat_ptr: jnp.ndarray
     lat_count: jnp.ndarray
     deadline_miss: jnp.ndarray
+    slot_steps: jnp.ndarray
+    decode_steps: jnp.ndarray
+    pages_peak: jnp.ndarray
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
@@ -99,6 +116,9 @@ class EngineState:
             lat_ptr=jnp.zeros((), jnp.int32),
             lat_count=jnp.zeros((), jnp.int32),
             deadline_miss=jnp.zeros((), jnp.int32),
+            slot_steps=jnp.zeros((), jnp.int32),
+            decode_steps=jnp.zeros((), jnp.int32),
+            pages_peak=jnp.zeros((), jnp.int32),
         )
 
     # -- views ----------------------------------------------------------
@@ -196,7 +216,8 @@ def request_stats(state: EngineState) -> dict:
 
 #: EngineState fields that carry serving telemetry (everything else is
 #: policy and stays replicated).
-TELEMETRY_FIELDS = ("served", "exit_counts", "total_macs", "since_update")
+TELEMETRY_FIELDS = ("served", "exit_counts", "total_macs", "since_update",
+                    "slot_steps", "decode_steps")
 
 #: Keys of the `adaptive` dict that are per-replica ring-buffer state; the
 #: remaining keys (coefficients, UCB counters, active_strategy, t) are
@@ -241,18 +262,22 @@ def state_shardings(state: EngineState, repl, row) -> EngineState:
         tau=repl, coef=repl, beta_diff=repl, beta_opt=repl,
         adaptive={**{k: repl for k in shared}, **{k: row for k in bufs}},
         served=row, exit_counts=row, total_macs=row, since_update=row,
-        # per-request latency telemetry: host-written, one global window
-        # per engine (no replica axis)
-        lat_ms=repl, lat_ptr=repl, lat_count=repl, deadline_miss=repl)
+        slot_steps=row, decode_steps=row,
+        # host-written telemetry: one global value per engine (no
+        # replica axis) — the latency window and the page high-watermark
+        lat_ms=repl, lat_ptr=repl, lat_count=repl, deadline_miss=repl,
+        pages_peak=repl)
 
 
 def restore_with_migration(path: str, template: EngineState,
                            step: int | None = None):
     """``checkpoint.restore`` with legacy-layout migration: a checkpoint
-    whose leaves are a strict prefix of the current flatten order (the
-    pre-latency-telemetry ``LEGACY_FIELDS`` era) restores those fields
-    and keeps the template's fresh values for the rest.  Returns
-    ``(state, step)``.  Shared by every engine's ``restore_state``."""
+    whose leaves are a strict prefix of the current flatten order (an
+    older ``_LAYOUT_PREFIXES`` era) restores those fields and keeps the
+    template's fresh values for the rest.  Prefixes are tried
+    newest-first so a checkpoint restores the LONGEST layout it
+    matches.  Returns ``(state, step)``.  Shared by every engine's
+    ``restore_state``."""
     from repro import checkpoint as CK
     try:
         restored, step, _ = CK.restore(path, template, step)
@@ -260,10 +285,17 @@ def restore_with_migration(path: str, template: EngineState,
     except ValueError as e:
         if "leaf count" not in str(e):
             raise
-    legacy = [getattr(template, f) for f in LEGACY_FIELDS]
-    leaves, step, _ = CK.restore(path, legacy, step)
-    return dataclasses.replace(
-        template, **dict(zip(LEGACY_FIELDS, leaves))), step
+    for i, fields in enumerate(_LAYOUT_PREFIXES):
+        legacy = [getattr(template, f) for f in fields]
+        try:
+            leaves, step, _ = CK.restore(path, legacy, step)
+        except ValueError as e:
+            if "leaf count" not in str(e) or i == len(_LAYOUT_PREFIXES) - 1:
+                raise
+            continue
+        return dataclasses.replace(
+            template, **dict(zip(fields, leaves))), step
+    raise AssertionError("unreachable")
 
 
 def reduce_telemetry(state: EngineState) -> dict:

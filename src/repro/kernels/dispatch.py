@@ -152,6 +152,8 @@ _AUTOTUNE: dict[tuple[str, str], dict] = {
     # fused exit head: vocab block target (shrunk to the VMEM budget
     # and to a divisor of V by exit_head_block_v)
     ("exit_head", "default"): {"block_v": 2048},
+    # paged KV gather: one page per grid step (the page IS the block)
+    ("paged_gather", "default"): {},
 }
 
 
@@ -192,6 +194,10 @@ def _difficulty_step_bytes(h: int, w: int, c: int) -> int:
 
 def _head_step_bytes(block_v: int, d: int) -> int:
     return (block_v * d + 3 * d + 2 * block_v) * 4   # table block + row
+
+
+def _paged_step_bytes(psz: int, trailing: int) -> int:
+    return psz * trailing * 4 * 2         # one page in + one block out
 
 
 # ---------------------------------------------------------------------------
@@ -360,6 +366,54 @@ def _exit_head_impl(h, scale, table, thresholds, *, eps, backend, block_v,
         in_specs=(P(axis), P(), P(), P(axis)),
         out_specs=(P(axis),) * 3)
     return wrapped(h, scale, table, thresholds)
+
+
+# ---------------------------------------------------------------------------
+# paged KV gather (continuous-batching decode): page store -> dense view
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend", "mesh", "axis"))
+def _paged_gather_impl(pages, page_table, *, backend, mesh, axis):
+    from repro.kernels.paged_gather import ref
+    if backend == "xla":
+        return ref.ref_paged_gather(pages, page_table)
+    from repro.kernels.paged_gather.paged_gather_kernel import \
+        paged_gather_pallas
+
+    def local(pg, tab):
+        # the continuous decoder allocates slot s's pages inside slot
+        # s's replica range, so global ids map to local shard rows by a
+        # plain modulo
+        return paged_gather_pallas(pg, tab % pg.shape[0],
+                                   interpret=_interpret(backend))
+
+    wrapped = _maybe_shard_map(local, mesh, axis,
+                               in_specs=(P(axis), P(axis)),
+                               out_specs=P(axis))
+    return wrapped(pages, page_table)
+
+
+def paged_gather(pages, page_table, *, mesh=None, axis: str = "data",
+                 backend: str | None = None):
+    """Dense per-slot view of a paged KV store.
+
+    pages (N, psz, ...) — the shared page store; page_table (S, P) int32
+    — slot i's pages in order.  Returns (S, P*psz, ...), bit-identical
+    to a contiguous (S, P*psz, ...) cache holding the same rows.  Inside
+    a sharded step pass ``mesh=``/``axis=``: pages shard over the page
+    axis, slots over the table axis (the decoder's range-partitioned
+    allocator keeps each slot's pages on its own replica)."""
+    psz = pages.shape[1]
+    trailing = 1
+    for d in pages.shape[2:]:
+        trailing *= d
+    chosen = _resolve("paged_gather", _paged_step_bytes(psz, trailing),
+                      backend, mesh, axis, page_table.shape[0])
+    if chosen != "xla" and mesh is not None \
+            and pages.shape[0] % _axis_size(mesh, axis):
+        chosen = "xla"            # page store must divide over replicas
+    return _paged_gather_impl(pages, page_table, backend=chosen,
+                              mesh=mesh, axis=axis)
 
 
 def exit_head_gate(h, scale, table, thresholds, *, eps: float = 1e-6,

@@ -1,0 +1,3 @@
+# Paged KV-cache gather: page_table-indexed block gather that turns the
+# continuous-batching page store into the dense (S, P*psz, ...) view the
+# decode attention math consumes.

@@ -1,0 +1,17 @@
+"""Public wrapper for the paged KV gather.
+
+Backend selection, the VMEM page-block budget check and shard_map
+wrapping live in ``repro.kernels.dispatch``; this module keeps the
+package's ``ops`` import path consistent with the other kernels.
+"""
+from __future__ import annotations
+
+from repro.kernels import dispatch
+
+
+def paged_gather(pages, page_table, *, mesh=None, axis="data",
+                 backend=None):
+    """Gather a slot's KV pages into the dense (S, P*psz, ...) view.
+    See ``dispatch.paged_gather``."""
+    return dispatch.paged_gather(pages, page_table, mesh=mesh, axis=axis,
+                                 backend=backend)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the paged KV gather.
+
+This IS the ``"xla"`` dispatch backend on the continuous-batching decode
+hot path, so it must be BIT-IDENTICAL to reading a contiguous cache: a
+page gather only *moves* rows, so the reference is a plain ``jnp.take``
+over the page axis followed by a reshape — no arithmetic touches the
+values.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_paged_gather(pages, page_table):
+    """pages (N, psz, ...), page_table (S, P) int32 of page ids.
+
+    Returns the dense per-slot view (S, P*psz, ...): slot i's pages
+    concatenated in table order.  Table entries must be valid page ids
+    (the allocator backfills unused entries with page 0; positions past
+    a slot's length are masked by the caller's ``kv_len``).
+    """
+    s, p = page_table.shape
+    psz = pages.shape[1]
+    flat = jnp.take(pages, page_table.reshape(-1), axis=0, mode="clip")
+    return flat.reshape(s, p * psz, *pages.shape[2:])

@@ -451,6 +451,100 @@ def mla_decode(p, x, cos, sin, cache, cache_index):
 
 
 # ---------------------------------------------------------------------------
+# Paged decode — slot-pool continuous batching over a block KV cache
+# ---------------------------------------------------------------------------
+#
+# The paged variants mirror gqa_decode / mla_decode but replace the
+# (B, Smax, ...) per-row cache with a shared page store (N_pages, psz, ...)
+# indexed through a per-slot ``page_table`` (S, P).  Each slot carries its
+# OWN position (``positions``: (S,)), so rows at different depths/lengths
+# coexist in one fixed-shape launch.  Writes go through a precomputed
+# (page_idx, offset) pair — callers pass an out-of-range page index for
+# rows that must not write (inactive slots, rows that already fired an
+# exit this step) and the ``mode="drop"`` scatter discards them.  Reads
+# gather the slot's pages back into a dense (S, P*psz, ...) view via
+# ``kernels.dispatch.paged_gather`` and reuse the exact dense attention
+# math, so values are bit-identical to the contiguous-cache oracle at
+# equal padded length.
+
+
+def paged_write(pages, rows, page_idx, offset):
+    """Scatter one row per slot into ``pages[page_idx[i], offset[i]]``.
+
+    pages: (N, psz, ...); rows: (S, ...); page_idx/offset: (S,) int32.
+    Out-of-range page_idx entries are dropped (masked write).
+    """
+    return pages.at[page_idx, offset].set(rows.astype(pages.dtype),
+                                          mode="drop")
+
+
+def gqa_decode_paged(p, x, cos, sin, pages, page_table, page_idx, offset,
+                     positions, *, gather_kw=None):
+    """One-token GQA decode against a paged KV cache.
+
+    x: (S, 1, D); pages: {"k","v"}: (N, psz, Hkv, Dh); page_table: (S, P);
+    page_idx/offset/positions: (S,) int32 (per-slot write target and
+    current position).  Returns (out (S, 1, D), new pages).
+    """
+    from repro.kernels import dispatch as KD
+    gather_kw = gather_kw or {}
+    pos2 = positions[:, None]                               # (S, 1)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, cos, sin, pos2)
+    k = apply_rope(k, cos, sin, pos2)
+    k_pages = paged_write(pages["k"], k[:, 0], page_idx, offset)
+    v_pages = paged_write(pages["v"], v[:, 0], page_idx, offset)
+    k_view = KD.paged_gather(k_pages, page_table, **gather_kw)
+    v_view = KD.paged_gather(v_pages, page_table, **gather_kw)
+    o = decode_attention(q, k_view, v_view, positions + 1)
+    return gqa_out(p, o), {"k": k_pages, "v": v_pages}
+
+
+def mla_decode_paged(p, x, cos, sin, pages, page_table, page_idx, offset,
+                     positions, *, gather_kw=None):
+    """Absorbed MLA decode against a paged latent cache.
+
+    pages: {"c_kv": (N, psz, kv_lora), "k_rope": (N, psz, rope)}.
+    Same per-slot indexing contract as :func:`gqa_decode_paged`.
+    """
+    from repro.kernels import dispatch as KD
+    gather_kw = gather_kw or {}
+    kv_lora, nope, rope, vdim = _mla_dims(p)
+    pos2 = positions[:, None]                               # (S, 1)
+
+    q_lat = rmsnorm(p["q_norm"], x @ p["wq_a"])
+    q = jnp.einsum("bsl,lhk->bshk", q_lat, p["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, cos, sin, pos2)
+    q_abs = jnp.einsum("bshk,lhk->bshl", q_nope, p["wk_b"])
+
+    kv = x @ p["wkv_a"]
+    c_new = rmsnorm(p["kv_norm"], kv[..., :kv_lora])
+    kr_new = apply_rope(kv[..., kv_lora:][:, :, None, :], cos, sin,
+                        pos2)[:, :, 0, :]
+    c_pages = paged_write(pages["c_kv"], c_new[:, 0], page_idx, offset)
+    r_pages = paged_write(pages["k_rope"], kr_new[:, 0], page_idx, offset)
+    c_view = KD.paged_gather(c_pages, page_table, **gather_kw)
+    r_view = KD.paged_gather(r_pages, page_table, **gather_kw)
+
+    lp = c_view.shape[1]
+    scale = 1.0 / math.sqrt(nope + rope)
+    scores = (jnp.einsum("bshl,btl->bhst", q_abs, c_view)
+              + jnp.einsum("bshr,btr->bhst", q_rope, r_view)
+              ).astype(jnp.float32) * scale
+    ti = lax.broadcasted_iota(jnp.int32, (1, 1, 1, lp), 3)
+    scores = jnp.where(ti <= positions[:, None, None, None], scores,
+                       -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btl->bshl", w, c_view)
+    o = jnp.einsum("bshl,lhk->bshk", o_lat, p["wv_b"])
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"c_kv": c_pages, "k_rope": r_pages}
+
+
+# ---------------------------------------------------------------------------
 # Convolutions (NHWC)
 # ---------------------------------------------------------------------------
 

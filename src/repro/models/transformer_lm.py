@@ -606,19 +606,30 @@ def lm_decode_step(params, token_ids, cache, cache_index, cfg: LMConfig, *,
 
 
 def lm_kv_project(params, h_exit, cfg: LMConfig, cache, cache_index,
-                  from_layer: int):
+                  from_layer: int, *, positions=None, max_len=None):
     """Per-layer KV projections of a frozen exit hidden state — the
     CALM propagation math, shared by the eager :func:`lm_kv_propagate`
     and the LM engine's fused sharded step (which scatters these rows
     itself).  ``cache`` is only probed for ``max_len``; returns a list
     over layers [from_layer, n_layers) of cache-leaf dicts shaped
-    (B', 1, ...)."""
-    max_len = (cache[0]["c_kv"].shape[1] if cfg.attn_kind == "mla"
-               else cache[0]["k"].shape[1])
+    (B', 1, ...).
+
+    The paged continuous-batching step passes per-slot ``positions``
+    ((B,) int32 — rows sit at different depths) and an explicit
+    ``max_len`` (the padded page view length); ``cache``/``cache_index``
+    may then be None.  The defaults preserve the contiguous-cache
+    contract exactly.
+    """
+    if max_len is None:
+        max_len = (cache[0]["c_kv"].shape[1] if cfg.attn_kind == "mla"
+                   else cache[0]["k"].shape[1])
     cos, sin = L.rope_freqs(
         cfg.qk_rope_dim if cfg.attn_kind == "mla" else cfg.hd,
         max_len, cfg.rope_theta)
-    positions = jnp.full((h_exit.shape[0], 1), cache_index, jnp.int32)
+    if positions is None:
+        positions = jnp.full((h_exit.shape[0], 1), cache_index, jnp.int32)
+    elif positions.ndim == 1:
+        positions = positions[:, None]
     x = h_exit[:, None, :]
     rows = []
     for i in range(from_layer, cfg.n_layers):

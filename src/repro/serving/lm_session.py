@@ -17,6 +17,13 @@ sizes are padded with ``engine.bucket_key`` so every size inside a
 bucket reuses one compiled program per stage.  Deadlines, priorities,
 backpressure and the size-or-deadline flush policy behave exactly as in
 :class:`~repro.serving.loop.AsyncDartServer`.
+
+:class:`LMContinuousSession` (``engine.session(continuous=True)``)
+replaces bucket flushes with continuous slot refill: requests are
+admitted one at a time into a :class:`~repro.engine.lm
+.ContinuousLMDecoder` slot pool the moment capacity frees up, so a
+long request never holds a bucket open and a finished (or
+early-exited) request's slot serves the queue THAT step.
 """
 from __future__ import annotations
 
@@ -25,7 +32,7 @@ from concurrent.futures import Future
 import numpy as np
 
 from repro.serving.loop import SchedulerConfig, _BucketScheduler
-from repro.serving.request import Request
+from repro.serving.request import Request, RequestRejected
 
 
 class LMDecodeSession(_BucketScheduler):
@@ -90,3 +97,118 @@ class LMDecodeSession(_BucketScheduler):
                 "exit_hist": np.asarray(self.engine.stats_exit).tolist(),
                 "layers_run": self.engine.layers_run,
                 "layers_skipped": self.engine.layers_skipped}
+
+
+class LMContinuousSession(LMDecodeSession):
+    """Continuous-batching session over a :class:`ContinuousLMDecoder`
+    (ISSUE 7): requests stream through the slot pool one at a time as
+    slots and KV pages free up — no bucket consolidation, no flush
+    barriers, and rows of different requests (at different depths)
+    share every compiled decode launch.
+
+        session = engine.session(continuous=True, n_slots=8)
+        fut = session.submit(prompt_tokens, n_new=16)
+
+    Admission order is (priority desc, submit time asc) across lanes
+    via ``RequestQueue.pop_next``; a senior request that cannot fit
+    right now reserves freed capacity after ``cfg.starve_ms`` instead
+    of being backfilled around forever.  A request whose shape can
+    NEVER fit the decoder is rejected at submit.  Early exits free
+    pages mid-request-stream: Alg. 1 early termination is what creates
+    admission capacity."""
+
+    def __init__(self, engine, cfg: SchedulerConfig | None = None, *,
+                 n_slots=None, page_size=8, max_len=None, decoder=None,
+                 **kw):
+        self.decoder = decoder if decoder is not None else \
+            engine.continuous(n_slots=n_slots, page_size=page_size,
+                              max_len=max_len)
+        self._pending: dict = {}      # rid -> Request (rows in the pool)
+        super().__init__(engine, cfg=cfg, **kw)
+
+    # -- hooks ----------------------------------------------------------
+    def _bucket_key(self, n: int) -> int:
+        return n                      # no bucket shapes to consolidate
+
+    def _max_batch_cap(self) -> int:
+        return self.decoder.n_slots
+
+    def submit(self, prompt_tokens, deadline_ms: float | None = None,
+               priority: int = 0, **kw) -> Future:
+        x = np.asarray(prompt_tokens)
+        if x.ndim == 1:
+            x = x[None]
+        n_new = int(kw.get("n_new", 0))
+        if not self.decoder.fits_ever(x.shape[0], x.shape[1], n_new):
+            fut: Future = Future()
+            fut.set_exception(RequestRejected(
+                f"request (rows={x.shape[0]}, s0={x.shape[1]}, "
+                f"n_new={n_new}) can never fit the decoder "
+                f"(n_slots={self.decoder.n_slots}, "
+                f"max_len={self.decoder.max_len})"))
+            return fut
+        return super().submit(x, deadline_ms, priority, **kw)
+
+    def _fits(self, req: Request) -> bool:
+        return self.decoder.can_admit(req.n, req.x.shape[1],
+                                      req.payload["n_new"])
+
+    # -- the scheduling loop --------------------------------------------
+    def pump(self) -> bool:
+        """One continuous-serving turn: refill free slots from the lane
+        queues (most urgent head first, with head-of-line capacity
+        reservation), then advance the pool one decode step and resolve
+        whatever finished.  Returns False when fully idle."""
+        did = False
+        now = self._clock()
+        while True:
+            req = self.queue.pop_next(
+                self._fits, reserve_after_s=self.cfg.starve_ms / 1e3,
+                now=now)
+            if req is None:
+                break
+            self.decoder.admit(req.x, req.payload["n_new"], tag=req.rid)
+            self._pending[req.rid] = req
+            did = True
+        if self.decoder.active_rows:
+            done = []
+            for tag, toks, stgs in self.decoder.step():
+                req = self._pending.pop(tag)
+                t_done = self._clock()
+                lat_ms = (t_done - req.t_submit) * 1e3
+                miss = req.deadline_s is not None \
+                    and t_done > req.deadline_s
+                done.append((req, toks, stgs, lat_ms, miss))
+            # fold telemetry BEFORE resolving: a caller that waited on
+            # result() then reads stats() must see its request counted
+            if done:
+                self.engine.record_requests(
+                    [d[3] for d in done], [d[4] for d in done])
+            for req, toks, stgs, lat_ms, miss in done:
+                req.resolve({"tokens": toks, "stages": stgs,
+                             "latency_ms": lat_ms,
+                             "deadline_missed": miss, "lane": req.lane})
+                self.counters["completed"] += 1
+            did = True
+        return did
+
+    def _wait_timeout(self, now: float) -> float | None:
+        if self.decoder.active_rows:
+            return 1e-4               # keep stepping the pool
+        return super()._wait_timeout(now)
+
+    def _has_inflight(self) -> bool:
+        return bool(self.decoder.active_rows or self._pending)
+
+    def flush(self) -> None:
+        """Serve everything queued or in flight to completion (shutdown
+        / test barrier).  Always terminates: an empty pool admits any
+        admissible request, and a stepped pool frees capacity."""
+        while (not self.queue.empty) or self.decoder.active_rows:
+            if not self.pump():
+                break
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["continuous"] = self.decoder.stats()
+        return out

@@ -70,6 +70,10 @@ class SchedulerConfig:
     pipeline_depth: max in-flight (unmaterialized) buckets
     edges:          difficulty-class boundaries on Eq. 8 alpha
     sample_ndim:    rank of ONE sample (submit auto-batches bare samples)
+    starve_ms:      continuous slot refill only — how long the most
+                    urgent queued request may be passed over for lack
+                    of capacity before freed slots are reserved for it
+                    (see ``RequestQueue.pop_next``)
     """
     max_batch: int = 64
     flush_ms: float = 5.0
@@ -82,6 +86,7 @@ class SchedulerConfig:
     pipeline_depth: int = 2
     edges: tuple = DIFF.DEFAULT_EDGES
     sample_ndim: int = 3
+    starve_ms: float = 50.0
 
 
 class _BucketScheduler:

@@ -126,6 +126,31 @@ class RequestQueue:
             ds = [r.deadline_s for r in lane if r.deadline_s is not None]
             return min(ds) if ds else None
 
+    def pop_next(self, fits, *, reserve_after_s: float = 0.05,
+                 now: float | None = None) -> Request | None:
+        """Pop the most urgent lane head that ``fits`` — the continuous
+        slot-refill primitive (no bucket consolidation; one request at
+        a time as slots free up).
+
+        Lane heads are ranked (priority desc, submit time asc, rid
+        asc).  If the MOST urgent head does not fit right now and has
+        already waited ``reserve_after_s``, returns None WITHOUT
+        considering junior heads: freed capacity is reserved for the
+        starved senior instead of an endless stream of smaller juniors
+        backfilling around it (the anti-starvation guarantee the
+        continuous session's edge test pins)."""
+        with self._lock:
+            heads = [lane[0] for lane in self._lanes.values() if lane]
+            heads.sort(key=lambda r: (-r.priority, r.t_submit, r.rid))
+            for r in heads:
+                if fits(r):
+                    self._lanes[r.lane].popleft()
+                    return r
+                if now is not None \
+                        and now - r.t_submit >= reserve_after_s:
+                    return None     # hold capacity for this head
+            return None
+
     # ------------------------------------------------------------------
     # flush
     # ------------------------------------------------------------------

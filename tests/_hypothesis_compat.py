@@ -1,0 +1,95 @@
+"""Deterministic fallback for the tiny hypothesis API surface the
+property tests use (``given`` / ``settings`` / ``st.integers`` /
+``st.floats`` / ``st.sampled_from``).
+
+The real hypothesis package (pinned in requirements-test.txt) is the
+primary engine — it shrinks failures and explores adversarially.  This
+shim exists so environments where test extras cannot be installed still
+RUN the properties (seeded uniform sampling, same example counts)
+instead of skipping them wholesale, which is how three test modules
+stayed perpetually skipped through PRs 1-6.
+
+When ``REPRO_REQUIRE_HYPOTHESIS`` is set (CI does this), importing the
+shim raises ImportError: the fallback must never mask a broken test
+environment where the declared dependency should have been installed.
+"""
+import os
+
+if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+    raise ImportError(
+        "REPRO_REQUIRE_HYPOTHESIS is set: the real hypothesis package "
+        "(requirements-test.txt) is required; the deterministic "
+        "fallback shim is disabled")
+
+import zlib
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    """A draw rule: maps a RandomState to one example."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(
+            rng.randint(min_value, max_value + 1, dtype=np.int64)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: lo + (hi - lo) * float(
+            rng.random_sample()))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.randint(len(opts)))])
+
+
+st = strategies
+
+
+def settings(max_examples: int = DEFAULT_EXAMPLES, deadline=None,
+             **_ignored):
+    """Records the example budget on the decorated function; ``given``
+    reads it at call time, so either decorator order works."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_max_examples",
+                        getattr(fn, "_max_examples", DEFAULT_EXAMPLES))
+            # seeded per test NAME: deterministic across runs and
+            # independent of suite ordering
+            rng = np.random.RandomState(
+                zlib.crc32(fn.__name__.encode()) & 0x7FFFFFFF)
+            for i in range(n):
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): "
+                        f"{drawn!r}") from e
+        # NOT functools.wraps: pytest would follow __wrapped__ to the
+        # inner signature and demand fixtures for the drawn arguments
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco

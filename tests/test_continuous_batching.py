@@ -1,0 +1,504 @@
+"""Continuous batching (slot pool + paged KV cache) differential /
+property harness — ISSUE 7.
+
+The load-bearing property: for EVERY interleaving of admissions into
+the slot pool, every request's tokens AND exit stages are bit-identical
+to the eager per-request oracle run at the decoder's padded view
+length.  On top of that, structural invariants hold after every step
+(no slot double-allocation, every freed page returns to the free list,
+active-mask ∧ page-table ∧ free-list consistency), exactly ONE decode
+step (and one embed step) is ever compiled regardless of admission
+pattern, and a starved senior request reserves freed capacity instead
+of being backfilled around forever.
+
+In-process tests run mesh-less and on the 1-device ("data",) mesh; the
+real 8-replica run executes in a subprocess with
+``--xla_force_host_platform_device_count=8`` like test_lm_sharded.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # deterministic fallback (raises under REPRO_REQUIRE_HYPOTHESIS=1,
+    # which CI sets — there the real package must be installed)
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.routing import DartParams
+from repro.engine import LMDecodeEngine
+from repro.engine.compactor import OutOfCapacity
+from repro.launch.mesh import make_serving_mesh
+from repro.models.transformer_lm import LMConfig, lm_init
+from repro.parallel.sharding import unzip
+from repro.serving.loop import SchedulerConfig
+from repro.serving.request import RequestRejected
+
+CFG = LMConfig(name="lm-cont-t", n_layers=4, d_model=32, n_heads=2,
+               n_kv_heads=1, d_ff=64, vocab=32, exit_layers=(0, 2),
+               max_seq=64, remat=False)
+
+POOL = dict(n_slots=4, page_size=4, max_len=16)
+
+
+@pytest.fixture(scope="module")
+def lm_params():
+    return unzip(lm_init(jax.random.key(0), CFG))[0]
+
+
+_PARAMS_CACHE = []
+
+
+def _params():
+    # module-scope cache usable from hypothesis-driven tests (which
+    # cannot take pytest fixtures)
+    if not _PARAMS_CACHE:
+        _PARAMS_CACHE.append(unzip(lm_init(jax.random.key(0), CFG))[0])
+    return _PARAMS_CACHE[0]
+
+
+def _dart(tau):
+    return DartParams(tau=jnp.full((2,), tau), coef=jnp.ones(2),
+                      beta_diff=0.1)
+
+
+def _engine(tau=0.0, mesh=None):
+    return LMDecodeEngine(CFG, _params(), _dart(tau), mesh=mesh)
+
+
+def _random_stream(rs, n_reqs, view_len):
+    """(tag, prompts, n_new) requests whose KV footprint fits a slot."""
+    reqs = []
+    for i in range(n_reqs):
+        b = int(rs.randint(1, 3))
+        s0 = int(rs.randint(2, 8))
+        n_new = int(rs.randint(1, view_len - s0 + 2))
+        reqs.append((i, rs.randint(0, CFG.vocab, (b, s0)), n_new))
+    return reqs
+
+
+def _drive(dec, rs, reqs):
+    """Random admission interleaving: requests are admitted FIFO but at
+    random steps (whenever capacity allows AND a coin flip agrees —
+    except into an idle pool, which always admits, guaranteeing
+    progress).  Invariants are checked after every admission batch and
+    every step."""
+    results = {}
+    pending = list(reqs)
+    steps = 0
+    while len(results) < len(reqs):
+        steps += 1
+        assert steps < 1000, "stream did not converge"
+        while pending:
+            tag, p, n = pending[0]
+            if not dec.can_admit(p.shape[0], p.shape[1], n):
+                break
+            if dec.active_rows and rs.rand() < 0.5:
+                break                   # defer: vary the interleaving
+            dec.admit(p, n, tag=tag)
+            pending.pop(0)
+        dec.check_invariants()
+        for tag, toks, stgs in dec.step():
+            results[tag] = (toks, stgs)
+        dec.check_invariants()
+    return results
+
+
+# ---------------------------------------------------------------------------
+# the differential property (satellite 1)
+# ---------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       tau=st.sampled_from([0.0, 0.05, 1.0]))
+def test_random_streams_match_eager_oracle(seed, tau):
+    """Slot-pool decode ≡ eager oracle on tokens AND exit stages for a
+    random request stream under a random admission interleaving, with
+    the structural invariants holding after every step."""
+    rs = np.random.RandomState(seed)
+    eng = _engine(tau)
+    oracle = _engine(tau)
+    dec = eng.continuous(**POOL)
+    reqs = _random_stream(rs, int(rs.randint(3, 7)), dec.view_len)
+    results = _drive(dec, rs, reqs)
+    for tag, p, n in reqs:
+        toks, stgs = results[tag]
+        # the oracle must run at the decoder's padded view length: the
+        # attention reduction shape is part of the bit-identity contract
+        ot, os_ = oracle.generate(p, n, max_len=dec.view_len,
+                                  mode="eager")
+        np.testing.assert_array_equal(toks, ot, err_msg=f"req {tag}")
+        np.testing.assert_array_equal(stgs, os_, err_msg=f"req {tag}")
+    # drained pool: every slot and page back on the free lists
+    assert dec.pool.in_use == 0 and dec.allocator.in_use == 0
+    dec.check_invariants()
+
+
+def test_stream_telemetry_matches_eager_engine(lm_params):
+    """Device telemetry (served / exit_counts / total_macs) and host
+    diagnostics folded by the continuous path equal an eager engine
+    serving the identical stream."""
+    rs = np.random.RandomState(3)
+    eng = _engine(0.0)
+    eager = _engine(0.0)
+    dec = eng.continuous(**POOL)
+    reqs = _random_stream(rs, 4, dec.view_len)
+    _drive(dec, rs, reqs)
+    for _, p, n in reqs:
+        eager.generate(p, n, max_len=dec.view_len, mode="eager")
+    a, b = eng.stats(), eager.stats()
+    assert a["served"] == b["served"]
+    np.testing.assert_array_equal(a["exit_counts"], b["exit_counts"])
+    np.testing.assert_allclose(a["total_macs"], b["total_macs"],
+                               rtol=1e-5)
+    assert a["layers_run"] == b["layers_run"]
+    assert a["layers_skipped"] == b["layers_skipped"]
+    np.testing.assert_array_equal(eng.stats_exit, eager.stats_exit)
+    cont = a["continuous"]
+    assert cont["decode_steps"] > 0
+    assert cont["slot_steps"] >= a["served"]
+    assert cont["pages_peak"] > 0
+
+
+# ---------------------------------------------------------------------------
+# trace-count regression (satellite 2)
+# ---------------------------------------------------------------------------
+def test_one_decode_trace_for_every_admission_pattern(lm_params):
+    """trace_counts stays at ONE compiled decode step and ONE embed
+    step no matter how requests arrive: all-at-once, one-at-a-time,
+    staggered mid-flight, different prompt lengths and n_new."""
+    eng = _engine(0.0)
+    dec = eng.continuous(**POOL)
+    rs = np.random.RandomState(7)
+    # pattern 1: everything up front
+    for i in range(3):
+        dec.admit(rs.randint(0, CFG.vocab, (1, 5)), 4, tag=("a", i))
+    while dec.active_rows:
+        dec.step()
+    # pattern 2: staggered admissions joining mid-flight
+    dec.admit(rs.randint(0, CFG.vocab, (1, 3)), 8, tag="b0")
+    dec.step()
+    dec.admit(rs.randint(0, CFG.vocab, (2, 6)), 5, tag="b1")
+    dec.step()
+    dec.admit(rs.randint(0, CFG.vocab, (1, 7)), 2, tag="b2")
+    while dec.active_rows:
+        dec.step()
+    key_d = ("lm-cont-decode", dec.n_slots, dec.page_size,
+             dec.pages_per_slot)
+    key_e = ("lm-cont-embed", dec.n_slots)
+    assert eng.trace_counts[key_d] == 1, eng.trace_counts
+    assert eng.trace_counts[key_e] == 1, eng.trace_counts
+    # prefill compiles once per distinct prompt length, never more
+    pf = {k: n for k, n in eng.trace_counts.items()
+          if k[0] == "lm-cont-prefill"}
+    assert pf and all(n == 1 for n in pf.values()), pf
+    # a SECOND decoder of the same geometry reuses every compiled step
+    dec2 = eng.continuous(**POOL)
+    dec2.admit(rs.randint(0, CFG.vocab, (1, 5)), 3, tag="c")
+    while dec2.active_rows:
+        dec2.step()
+    assert eng.trace_counts[key_d] == 1
+    assert eng.trace_counts[key_e] == 1
+
+
+# ---------------------------------------------------------------------------
+# allocator / reclamation edges (satellites 1 + 4)
+# ---------------------------------------------------------------------------
+def test_admission_is_all_or_nothing_and_bounded(lm_params):
+    eng = _engine(1.0)
+    dec = eng.continuous(**POOL)
+    rs = np.random.RandomState(11)
+    # a request that can never fit raises ValueError, not OutOfCapacity
+    with pytest.raises(ValueError, match="can never fit"):
+        dec.admit(rs.randint(0, CFG.vocab, (1, 30)), 20)
+    # fill the pool, then an admissible-shape request must raise
+    # OutOfCapacity and leave NO partial allocation behind
+    dec.admit(rs.randint(0, CFG.vocab, (4, 5)), 8, tag="full")
+    held_before = (dec.pool.in_use, dec.allocator.in_use)
+    with pytest.raises(OutOfCapacity):
+        dec.admit(rs.randint(0, CFG.vocab, (1, 5)), 8)
+    assert (dec.pool.in_use, dec.allocator.in_use) == held_before
+    dec.check_invariants()
+    # early-exit completion frees everything the same call
+    while dec.active_rows:
+        dec.step()
+    assert dec.pool.in_use == 0 and dec.allocator.in_use == 0
+
+
+def test_midflight_release_frees_slot_and_pages(lm_params):
+    """A request cancelled mid-cascade releases its KV pages and slots
+    immediately; the survivor stream is unaffected (its results still
+    match the oracle)."""
+    eng = _engine(1.0)
+    oracle = _engine(1.0)
+    dec = eng.continuous(**POOL)
+    rs = np.random.RandomState(13)
+    pa = rs.randint(0, CFG.vocab, (2, 5))
+    pb = rs.randint(0, CFG.vocab, (2, 5))
+    dec.admit(pa, 8, tag="a")
+    dec.admit(pb, 8, tag="b")
+    dec.step()
+    dec.step()
+    in_use = dec.allocator.in_use
+    assert dec.release("a")
+    dec.check_invariants()
+    assert dec.pool.in_use == 2
+    assert dec.allocator.in_use == in_use // 2
+    # freed capacity is admittable THAT step
+    assert dec.can_admit(2, 5, 8)
+    events = []
+    while dec.active_rows:
+        events += dec.step()
+    assert [t for t, _, _ in events] == ["b"]
+    ot, os_ = oracle.generate(pb, 8, max_len=dec.view_len, mode="eager")
+    np.testing.assert_array_equal(events[0][1], ot)
+    np.testing.assert_array_equal(events[0][2], os_)
+    assert dec.allocator.in_use == 0 and dec.pool.in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# session: starvation / requeue edges (satellite 4)
+# ---------------------------------------------------------------------------
+class _FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def now(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _cont_session(eng, clock, **cfg_kw):
+    cfg = SchedulerConfig(policy="reject", flush_ms=0.0, **cfg_kw)
+    return eng.session(continuous=True, cfg=cfg, clock=clock.now,
+                       start=False, **POOL)
+
+
+def test_starved_senior_reserves_freed_capacity(lm_params):
+    """A wide request that cannot fit the busy pool is NOT backfilled
+    around forever: after starve_ms, freed slots are held for it, so it
+    completes before later-submitted juniors that would individually
+    fit."""
+    eng = _engine(1.0)
+    clock = _FakeClock()
+    sess = _cont_session(eng, clock, starve_ms=10.0)
+    rs = np.random.RandomState(17)
+    # stagger pool occupancy: 2 rows finish early, 2 late
+    f_short = sess.submit(rs.randint(0, CFG.vocab, (2, 5)), n_new=2)
+    f_long = sess.submit(rs.randint(0, CFG.vocab, (2, 5)), n_new=8)
+    sess.pump()                      # both admitted: pool full
+    assert sess.decoder.active_rows == 4
+    big = sess.submit(rs.randint(0, CFG.vocab, (3, 5)), n_new=2)
+    clock.advance(0.1)               # senior now starved (> starve_ms)
+    # juniors in a DIFFERENT lane (shorter prompts): they are lane
+    # heads in their own right, so only pop_next's head-of-line
+    # reservation keeps them from backfilling around the senior
+    smalls = [sess.submit(rs.randint(0, CFG.vocab, (1, 4)), n_new=2)
+              for _ in range(3)]
+    order = []
+    for _ in range(200):
+        sess.pump()
+        for name, f in [("big", big)] + \
+                [(f"s{i}", f) for i, f in enumerate(smalls)]:
+            if f.done() and name not in order:
+                order.append(name)
+        if len(order) == 4:
+            break
+    assert f_short.done() and f_long.done()
+    # the short request's freed slots were RESERVED: no small ran
+    # before the starved big request
+    assert order[0] == "big", order
+    assert set(order[1:]) == {"s0", "s1", "s2"}
+    sess.close()
+
+
+def test_fresh_senior_is_not_reserved_for_prematurely(lm_params):
+    """Before starve_ms elapses, juniors may backfill around a senior
+    that doesn't fit — reservation is a starvation remedy, not a
+    head-of-line blockade."""
+    eng = _engine(1.0)
+    clock = _FakeClock()
+    sess = _cont_session(eng, clock, starve_ms=10_000.0)
+    rs = np.random.RandomState(19)
+    f_long = sess.submit(rs.randint(0, CFG.vocab, (2, 5)), n_new=6)
+    sess.pump()                      # 2 slots busy
+    big = sess.submit(rs.randint(0, CFG.vocab, (3, 5)), n_new=2)
+    # a different lane (shorter prompt): an independent lane head
+    small = sess.submit(rs.randint(0, CFG.vocab, (1, 4)), n_new=2)
+    for _ in range(50):
+        sess.pump()
+        if small.done():
+            break
+    # the junior ran in the leftover slots while the big one waited
+    assert small.done() and not big.done()
+    for _ in range(200):
+        sess.pump()
+        if big.done():
+            break
+    assert big.done() and f_long.done()
+    sess.close()
+
+
+def test_requeue_bypasses_backpressure_and_completes(lm_params):
+    """A requeued continuation (the cascade-escalation path) is exempt
+    from the lane limit AND keeps its original submit time, so it
+    outranks fresh juniors at the next refill."""
+    eng = _engine(1.0)
+    clock = _FakeClock()
+    sess = _cont_session(eng, clock, starve_ms=10.0, max_queue=1)
+    rs = np.random.RandomState(23)
+    blocker = sess.submit(rs.randint(0, CFG.vocab, (4, 5)), n_new=4)
+    sess.pump()                      # pool now full
+    # fill the (1-deep) lane, then requeue past the limit
+    f1 = sess.submit(rs.randint(0, CFG.vocab, (1, 5)), n_new=2)
+    cont = sess._admit(rs.randint(0, CFG.vocab, (1, 5)),
+                       None, 0, now=clock.now(), n_new=2)
+    assert sess.queue.push(
+        sess._admit(rs.randint(0, CFG.vocab, (1, 5)), None, 0,
+                    now=clock.now(), n_new=2)) == "rejected"
+    assert sess.queue.requeue(cont) == "queued"
+    for _ in range(200):
+        sess.pump()
+        if f1.done() and cont.future.done():
+            break
+    assert blocker.done() and f1.done() and cont.future.done()
+    assert not isinstance(cont.future.exception(), Exception)
+    sess.close()
+
+
+def test_impossible_request_rejected_at_submit(lm_params):
+    eng = _engine(1.0)
+    clock = _FakeClock()
+    sess = _cont_session(eng, clock)
+    fut = sess.submit(np.zeros((1, 30), np.int64), n_new=20)
+    with pytest.raises(RequestRejected):
+        fut.result(timeout=5)
+    sess.close()
+
+
+def test_session_stream_matches_oracle(lm_params):
+    """End-to-end through the continuous session (worker thread): every
+    caller's tokens/stages equal the per-request oracle."""
+    eng = _engine(0.05)
+    oracle = _engine(0.05)
+    sess = eng.session(continuous=True, **POOL)
+    rs = np.random.RandomState(29)
+    prompts = rs.randint(0, CFG.vocab, (6, 5))
+    futs = [sess.submit(prompts[i], n_new=6) for i in range(6)]
+    outs = [f.result(timeout=300) for f in futs]
+    view = sess.decoder.view_len
+    sess.close()
+    ot, os_ = oracle.generate(prompts, 6, max_len=view, mode="eager")
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(o["tokens"][0], ot[i])
+        np.testing.assert_array_equal(o["stages"][0], os_[i])
+    assert eng.stats()["requests"]["requests"] == 6
+
+
+# ---------------------------------------------------------------------------
+# sharded: 1-device mesh in-process, 8 fake devices in a subprocess
+# ---------------------------------------------------------------------------
+def test_continuous_on_mesh_matches_oracle(lm_params):
+    eng = LMDecodeEngine(CFG, lm_params, _dart(0.0),
+                         mesh=make_serving_mesh())
+    dec = eng.continuous(**POOL)
+    rs = np.random.RandomState(31)
+    reqs = _random_stream(rs, 4, dec.view_len)
+    results = _drive(dec, rs, reqs)
+    for tag, p, n in reqs:
+        ot, os_ = eng.generate(p, n, max_len=dec.view_len, mode="eager")
+        np.testing.assert_array_equal(results[tag][0], ot)
+        np.testing.assert_array_equal(results[tag][1], os_)
+    key_d = ("lm-cont-decode", dec.n_slots, dec.page_size,
+             dec.pages_per_slot)
+    assert eng.trace_counts[key_d] == 1
+
+
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.routing import DartParams
+    from repro.engine import LMDecodeEngine
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.transformer_lm import LMConfig, lm_init
+    from repro.parallel.sharding import unzip
+
+    cfg = LMConfig(name="lm-cont-8dev", n_layers=4, d_model=32,
+                   n_heads=2, n_kv_heads=1, d_ff=64, vocab=32,
+                   exit_layers=(0, 2), max_seq=64, remat=False)
+    params = unzip(lm_init(jax.random.key(0), cfg))[0]
+    dart = DartParams(tau=jnp.full((2,), 0.0), coef=jnp.ones(2),
+                      beta_diff=0.1)
+    eng = LMDecodeEngine(cfg, params, dart, mesh=make_serving_mesh())
+    assert eng.n_replicas == 8, eng.n_replicas
+
+    dec = eng.continuous(n_slots=8, page_size=4, max_len=16)
+    assert dec.n_pages %% 8 == 0
+    # slot pool and page store physically sharded over the data axis
+    spec = jax.sharding.PartitionSpec("data")
+    leaf = dec.pages[0]["c_kv"] if cfg.attn_kind == "mla" \\
+        else dec.pages[0]["k"]
+    assert leaf.sharding.spec == spec, leaf.sharding
+    assert dec.alpha.sharding.spec == spec, dec.alpha.sharding
+
+    rs = np.random.RandomState(0)
+    reqs = [(i, rs.randint(0, cfg.vocab, (1 + int(rs.randint(2)),
+                                          2 + int(rs.randint(6)))),
+             1 + int(rs.randint(8))) for i in range(5)]
+    results = {}
+    pending = list(reqs)
+    while len(results) < len(reqs):
+        while pending:
+            tag, p, n = pending[0]
+            if not dec.can_admit(p.shape[0], p.shape[1], n):
+                break
+            dec.admit(p, n, tag=tag)
+            pending.pop(0)
+        dec.check_invariants()
+        for tag, toks, stgs in dec.step():
+            results[tag] = (toks, stgs)
+        dec.check_invariants()
+    for tag, p, n in reqs:
+        ot, os_ = eng.generate(p, n, max_len=dec.view_len, mode="eager")
+        np.testing.assert_array_equal(results[tag][0], ot)
+        np.testing.assert_array_equal(results[tag][1], os_)
+    assert dec.pool.in_use == 0 and dec.allocator.in_use == 0
+
+    # ONE decode + ONE embed trace regardless of admission pattern,
+    # with 8 replicas
+    key_d = ("lm-cont-decode", dec.n_slots, dec.page_size,
+             dec.pages_per_slot)
+    key_e = ("lm-cont-embed", dec.n_slots)
+    assert eng.trace_counts[key_d] == 1, eng.trace_counts
+    assert eng.trace_counts[key_e] == 1, eng.trace_counts
+
+    # telemetry reduced over replicas == an eager engine on the stream
+    eager = LMDecodeEngine(cfg, params, dart)
+    for _, p, n in reqs:
+        eager.generate(p, n, max_len=dec.view_len, mode="eager")
+    a, b = eng.stats(), eager.stats()
+    assert a["served"] == b["served"], (a["served"], b["served"])
+    np.testing.assert_array_equal(a["exit_counts"], b["exit_counts"])
+    assert a["continuous"]["decode_steps"] > 0
+    print("LM_CONT_8DEV_OK")
+""" % os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_continuous_equivalence_on_8_devices():
+    """Differential + invariants + one-trace assertions on an
+    8-fake-device ("data",) mesh (subprocess)."""
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "LM_CONT_8DEV_OK" in r.stdout
