@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test smoke engine-test bench bench-serving bench-async bench-lm \
-    bench-cascade bench-kernels perf-check docs-check deps
+    bench-cascade bench-kernels bench-obs dartop perf-check docs-check deps
 
 # Tier-1 verify (ROADMAP): docs lint + the full test suite, fail-fast.
 test: docs-check
@@ -47,6 +47,16 @@ bench-cascade:
 # artifacts/bench/).
 bench-kernels:
 	$(PY) -m benchmarks.kernels_bench
+
+# Observability overhead smoke: enabled-vs-disabled throughput ratio
+# (<=5% cost gate via perf-check) + Prometheus exposition validation
+# (JSON to artifacts/perf/obs.json, metrics to artifacts/perf/metrics.prom).
+bench-obs:
+	$(PY) -m benchmarks.serving_async --smoke
+
+# One-shot dashboard probe over the exported metrics file.
+dartop:
+	$(PY) tools/dartop.py --once --file artifacts/perf/metrics.prom
 
 # Perf regression gate: run the smoke sweep, fail on >15% regression vs
 # benchmarks/baselines/smoke.json.

@@ -156,7 +156,9 @@ def smoke_cell():
             ("cascade serving", "benchmarks.serving_cascade", (),
              "serving_cascade"),
             ("continuous LM serving", "benchmarks.serving_lm",
-             ("--continuous",), "serving_lm_cont")):
+             ("--continuous",), "serving_lm_cont"),
+            ("observability overhead", "benchmarks.serving_async",
+             ("--smoke",), "obs")):
         print(f"===== §Perf smoke: {title} (measured) =====")
         out_json = os.path.join(OUT, f"{key}.json")
         if os.path.exists(out_json):
@@ -170,10 +172,30 @@ def smoke_cell():
             with open(out_json) as f:
                 summary[key] = json.load(f)
     summary["ok"] = rc == 0
+    summary["meta"] = _artifact_meta()
     with open(os.path.join(OUT, "smoke.json"), "w") as f:
         json.dump(summary, f, indent=1)
     print(f"smoke summary -> {os.path.join(OUT, 'smoke.json')}")
     return rc
+
+
+def _artifact_meta():
+    """Host/toolchain stamp for perf artifacts, so a number in the
+    trajectory can always be traced to the environment that produced
+    it."""
+    import platform
+
+    meta = {"platform": platform.platform(),
+            "machine": platform.machine(),
+            "python": platform.python_version(),
+            "cpus": os.cpu_count()}
+    try:
+        import jax
+        meta["jax"] = jax.__version__
+        meta["jax_backend"] = jax.default_backend()
+    except Exception:                                  # noqa: BLE001
+        pass
+    return meta
 
 
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
@@ -202,8 +224,15 @@ def check_cell(baseline_path=BASELINE):
     failures = []
     print(f"\n===== §Perf regression check (tolerance {tol:.0%}) =====")
     for name, want in base["metrics"].items():
+        # a metric may carry its own tolerance: {"value": v,
+        # "tolerance": t} — the obs.overhead gate is 5%, much tighter
+        # than the 15% throughput-variance default
+        m_tol = tol
+        if isinstance(want, dict):
+            m_tol = float(want.get("tolerance", tol))
+            want = float(want["value"])
         got = float(_lookup(cur, name))
-        floor = want * (1.0 - tol)
+        floor = want * (1.0 - m_tol)
         status = "OK " if got >= floor else "REGRESSED"
         print(f"  {name}: baseline {want:.3f}  current {got:.3f}  "
               f"floor {floor:.3f}  {status}")
@@ -212,7 +241,8 @@ def check_cell(baseline_path=BASELINE):
     report = {"baseline": base["metrics"], "tolerance": tol,
               "current": {n: float(_lookup(cur, n))
                           for n in base["metrics"]},
-              "failures": failures, "ok": not failures}
+              "failures": failures, "ok": not failures,
+              "meta": _artifact_meta()}
     with open(os.path.join(OUT, "check.json"), "w") as f:
         json.dump(report, f, indent=1)
     if failures:

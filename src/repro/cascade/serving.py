@@ -38,6 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import difficulty as DIFF
+from repro.obs import OBS
+from repro.obs import adapters as OBS_A
+from repro.obs import log as OBS_LOG
 from repro.serving.loop import _RESULT_KEYS, AsyncDartServer
 from repro.serving.planner import AdmissionPlanner
 from repro.serving.request import Request
@@ -245,11 +248,12 @@ class CascadeAsyncServer(AsyncDartServer):
             # nobody awaits a continuation's own future — a dispatch
             # failure must surface on the ROOT future instead
             cont.future.add_done_callback(
-                lambda f, root=root: root.fail(f.exception())
-                if f.exception() is not None else None)
+                self._make_root_failer(root, cont))
             self.queue.requeue(cont)
             self.counters["escalated"] = \
                 self.counters.get("escalated", 0) + cont.n
+        if OBS.enabled and continuations:
+            OBS_A.record_escalations(member, continuations, now)
 
         lats, missed, resolutions = [], [], []
         for root, buf in finished:
@@ -274,8 +278,27 @@ class CascadeAsyncServer(AsyncDartServer):
         if lats:
             self.engine.record_requests(lats, missed)
         self.counters["completed"] += len(finished)
+        if OBS.enabled and resolutions:
+            OBS_A.record_completed(self, [r for r, _ in resolutions],
+                                   [res for _, res in resolutions],
+                                   t_dispatch, now)
         for root, res in resolutions:
             root.resolve(res)
+
+    @staticmethod
+    def _make_root_failer(root: Request, cont: Request):
+        """Done-callback propagating a continuation's failure to its
+        ROOT future — logged, because the root caller only sees the
+        exception, not WHICH member's continuation died."""
+        def fail_root(f):
+            exc = f.exception()
+            if exc is None:
+                return
+            OBS_LOG.error("cascade", "escalation continuation failed",
+                          exc=exc, rid=root.rid, cont_rid=cont.rid,
+                          lane=cont.lane)
+            root.fail(exc)
+        return fail_root
 
     # -- shutdown -------------------------------------------------------
     def flush(self) -> None:

@@ -166,6 +166,11 @@ class PageAllocator:
             self._held.discard(p)
             self._free[p // self.per_range].append(p)
 
+    def occupancy(self) -> dict:
+        """Host-side occupancy snapshot (the obs gauge source)."""
+        return {"total": self.n_pages, "in_use": self.in_use,
+                "free_per_range": [len(f) for f in self._free]}
+
 
 class SlotPool:
     """Free-list over ``n_slots`` decode slots, range-partitioned like
@@ -208,3 +213,8 @@ class SlotPool:
             raise AssertionError(f"slot {slot} released but not held")
         self._held.discard(slot)
         self._free[self.range_of(slot)].append(slot)
+
+    def occupancy(self) -> dict:
+        """Host-side occupancy snapshot (the obs gauge source)."""
+        return {"total": self.n_slots, "in_use": self.in_use,
+                "free_per_range": [len(f) for f in self._free]}

@@ -447,24 +447,17 @@ class DartEngine:
 
     def stats(self) -> dict:
         """Serving counters + windowed §II.C statistics."""
+        from repro.obs import stats as OBS_STATS
         s = self.state
-        served = int(s.served)
-        counts = np.asarray(s.exit_counts)
-        out = {"served": served,
-               "exit_counts": counts,
-               "exit_frac": counts / max(served, 1),
-               "total_macs": float(s.total_macs),
-               "mean_macs": float(s.total_macs) / max(served, 1),
-               "total_latency_s": self.total_latency_s,
-               "active_strategy": AD.STRATEGIES[
-                   int(s.adaptive["active_strategy"])]}
-        if served:
+        out = OBS_STATS.engine_summary(
+            ST.telemetry_totals(s, sharded=False))
+        out["total_latency_s"] = self.total_latency_s
+        out["active_strategy"] = AD.STRATEGIES[
+            int(s.adaptive["active_strategy"])]
+        if out["served"]:
             w = AD.window_stats(s.adaptive, self.acfg)
             out["window"] = {k: np.asarray(v) for k, v in w.items()}
-        req = ST.request_stats(s)
-        if req["requests"]:
-            out["requests"] = req
-        return out
+        return OBS_STATS.attach_requests(out, s)
 
     # ------------------------------------------------------------------
     # state round-trip

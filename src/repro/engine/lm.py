@@ -291,30 +291,19 @@ class LMDecodeEngine:
         """Decode telemetry: per-stage exit counts, tokens served, mean
         layer fraction spent (counters reduced over replicas when
         sharded)."""
-        if self.mesh is not None:
-            tel = {k: np.asarray(v) for k, v in
-                   ST.reduce_telemetry(self.state).items()}
-        else:
-            tel = {f: np.asarray(getattr(self.state, f))
-                   for f in ST.TELEMETRY_FIELDS}
-        served = int(tel["served"])
-        counts = tel["exit_counts"]
-        out = {"served": served,
-               "exit_counts": counts,
-               "exit_frac": counts / max(served, 1),
-               "total_macs": float(tel["total_macs"]),
-               "mean_macs": float(tel["total_macs"]) / max(served, 1),
-               "layers_run": self.layers_run,
-               "layers_skipped": self.layers_skipped,
-               "replicas": self.n_replicas,
-               "continuous": {
-                   "slot_steps": int(tel["slot_steps"]),
-                   "decode_steps": int(tel["decode_steps"]),
-                   "pages_peak": int(np.asarray(self.state.pages_peak))}}
-        req = ST.request_stats(self.state)
-        if req["requests"]:
-            out["requests"] = req
-        return out
+        from repro.obs import stats as OBS_STATS
+        tel = ST.telemetry_totals(self.state,
+                                  sharded=self.mesh is not None)
+        out = OBS_STATS.engine_summary(tel)
+        out.update(
+            layers_run=self.layers_run,
+            layers_skipped=self.layers_skipped,
+            replicas=self.n_replicas,
+            continuous={
+                "slot_steps": int(tel["slot_steps"]),
+                "decode_steps": int(tel["decode_steps"]),
+                "pages_peak": int(np.asarray(self.state.pages_peak))})
+        return OBS_STATS.attach_requests(out, self.state)
 
     def record_requests(self, latencies_ms, missed=None) -> None:
         """Fold completed-request latency/deadline telemetry into the
@@ -1175,6 +1164,23 @@ class ContinuousLMDecoder:
         return events
 
     # -- introspection --------------------------------------------------
+    def slots_of(self, tag) -> list:
+        """Slot ids currently held by the request admitted under ``tag``
+        (empty once the request has retired)."""
+        for rec in self._requests.values():
+            if rec["tag"] == tag:
+                return [int(s) for s in rec["slots"]]
+        return []
+
+    def occupancy(self) -> dict:
+        """Slot-pool / page-allocator occupancy gauges for the obs
+        registry (host ints only — never touches device state)."""
+        return {"slots_total": self.n_slots,
+                "slots_in_use": self.active_rows,
+                "pages_total": self.n_pages,
+                "pages_in_use": self.allocator.in_use,
+                "pages_peak": self._pages_hwm}
+
     def stats(self) -> dict:
         return {"n_slots": self.n_slots,
                 "active": self.active_rows,

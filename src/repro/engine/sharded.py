@@ -475,24 +475,16 @@ class ShardedDartEngine(DartEngine):
     def stats(self) -> dict:
         """Global serving statistics: counters summed over replicas,
         §II.C window statistics over the merged window."""
-        tel = {k: np.asarray(v) for k, v in
-               ST.reduce_telemetry(self.state).items()}
-        served = int(tel["served"])
-        counts = tel["exit_counts"]
-        out = {"served": served,
-               "exit_counts": counts,
-               "exit_frac": counts / max(served, 1),
-               "total_macs": float(tel["total_macs"]),
-               "mean_macs": float(tel["total_macs"]) / max(served, 1),
-               "total_latency_s": self.total_latency_s,
-               "active_strategy": AD.STRATEGIES[
-                   int(self.state.adaptive["active_strategy"])],
-               "replicas": self.n_replicas,
-               "served_per_replica": np.asarray(self.state.served)}
-        if served:
+        from repro.obs import stats as OBS_STATS
+        out = OBS_STATS.engine_summary(
+            ST.telemetry_totals(self.state, sharded=True))
+        out.update(
+            total_latency_s=self.total_latency_s,
+            active_strategy=AD.STRATEGIES[
+                int(self.state.adaptive["active_strategy"])],
+            replicas=self.n_replicas,
+            served_per_replica=np.asarray(self.state.served))
+        if out["served"]:
             w = AD.window_stats(ST.merged_adaptive(self.state), self.acfg)
             out["window"] = {k: np.asarray(v) for k, v in w.items()}
-        req = ST.request_stats(self.state)
-        if req["requests"]:
-            out["requests"] = req
-        return out
+        return OBS_STATS.attach_requests(out, self.state)

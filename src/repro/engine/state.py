@@ -303,6 +303,18 @@ def reduce_telemetry(state: EngineState) -> dict:
     return {f: jnp.sum(getattr(state, f), axis=0) for f in TELEMETRY_FIELDS}
 
 
+def telemetry_totals(state: EngineState, *, sharded: bool) -> dict:
+    """Host-side numpy totals of the telemetry leaves — the single
+    reduction behind every engine's ``stats()`` (and the join point the
+    obs tracer reconciles its host-side spans against).  ``sharded``
+    states reduce over the leading replica axis; eager states read the
+    scalar leaves directly."""
+    if sharded:
+        return {k: np.asarray(v)
+                for k, v in reduce_telemetry(state).items()}
+    return {f: np.asarray(getattr(state, f)) for f in TELEMETRY_FIELDS}
+
+
 def merged_adaptive(state: EngineState) -> dict:
     """One window view over all replicas: ring buffers (R, w) concatenate
     to (R*w,) — `buf_valid` already masks unwritten slots — while shared

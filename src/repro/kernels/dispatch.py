@@ -225,6 +225,23 @@ def _axis_size(mesh, axis) -> int:
 # forced re-dispatch from silently reusing a compilation made under a
 # different backend.
 
+#: (kernel, chosen-backend) -> times that decision was taken.  Trace-time
+#: bookkeeping like ``trace_counts`` — `_resolve` runs at the Python call
+#: level (outside jit), so counting here adds nothing to compiled steps.
+#: An unexpected "xla" fallback count for a pallas-preferred kernel is
+#: the alertable signal the obs registry exports.
+DISPATCH_COUNTS: dict = {}
+
+
+def dispatch_counts() -> dict:
+    """Snapshot of backend-resolution decisions since the last reset."""
+    return dict(DISPATCH_COUNTS)
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
+
+
 def _resolve(kernel: str, vmem_bytes: int, backend, mesh, axis,
              sharded_rows: int) -> str:
     chosen = select_backend(kernel, backend=backend,
@@ -234,7 +251,9 @@ def _resolve(kernel: str, vmem_bytes: int, backend, mesh, axis,
     # which partitions under plain GSPMD.
     if chosen != "xla" and mesh is not None \
             and sharded_rows % _axis_size(mesh, axis):
-        return "xla"
+        chosen = "xla"
+    key = (kernel, chosen)
+    DISPATCH_COUNTS[key] = DISPATCH_COUNTS.get(key, 0) + 1
     return chosen
 
 

@@ -31,6 +31,8 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.obs import OBS
+from repro.obs import adapters as OBS_A
 from repro.serving.loop import SchedulerConfig, _BucketScheduler
 from repro.serving.request import Request, RequestRejected
 
@@ -70,29 +72,38 @@ class LMDecodeSession(_BucketScheduler):
     def _dispatch(self, reqs: list, reason: str) -> None:
         n_new = reqs[0].payload["n_new"]
         prompts = np.concatenate([r.x for r in reqs])
+        t0 = self._clock()
         tokens, stages = self.engine.generate(prompts, n_new)
         now = self._clock()
         ends = np.cumsum([r.n for r in reqs])
-        lats, missed = [], []
+        lats, missed, slices = [], [], []
         for r, a, z in zip(reqs, np.concatenate([[0], ends[:-1]]), ends):
             lat_ms = (now - r.t_submit) * 1e3
             miss = r.deadline_s is not None and now > r.deadline_s
             lats.append(lat_ms)
             missed.append(miss)
-            r.resolve({"tokens": tokens[a:z], "stages": stages[a:z],
-                       "latency_ms": lat_ms, "deadline_missed": miss,
-                       "lane": r.lane})
+            slices.append(stages[a:z])
         # latency/deadline telemetry folds into the EngineState — the
         # ONE store behind both session.stats() and engine.stats()
         # (and it checkpoints with the engine)
         self.engine.record_requests(lats, missed)
+        if OBS.enabled:
+            OBS_A.record_lm_bucket(self, reqs, slices, t0, now)
+        for r, a, z in zip(reqs, np.concatenate([[0], ends[:-1]]), ends):
+            lat_ms = (now - r.t_submit) * 1e3
+            r.resolve({"tokens": tokens[a:z], "stages": stages[a:z],
+                       "latency_ms": lat_ms,
+                       "deadline_missed": r.deadline_s is not None
+                       and now > r.deadline_s,
+                       "lane": r.lane})
         self.counters["completed"] += len(reqs)
 
     # -- metering -------------------------------------------------------
     def stats(self) -> dict:
         from repro.engine.state import request_stats
         return {"scheduler": {**self.counters, "shed": self.queue.shed,
-                              "rejected": self.queue.rejected},
+                              "rejected": self.queue.rejected,
+                              "starved": self.queue.starved},
                 "requests": request_stats(self.engine.state),
                 "exit_hist": np.asarray(self.engine.stats_exit).tolist(),
                 "layers_run": self.engine.layers_run,
@@ -169,6 +180,8 @@ class LMContinuousSession(LMDecodeSession):
                 break
             self.decoder.admit(req.x, req.payload["n_new"], tag=req.rid)
             self._pending[req.rid] = req
+            if OBS.enabled:
+                OBS_A.record_slot_admit(self, req, self._clock())
             did = True
         if self.decoder.active_rows:
             done = []
@@ -185,6 +198,9 @@ class LMContinuousSession(LMDecodeSession):
                 self.engine.record_requests(
                     [d[3] for d in done], [d[4] for d in done])
             for req, toks, stgs, lat_ms, miss in done:
+                if OBS.enabled:
+                    OBS_A.record_slot_exit(self, req, stgs, lat_ms, miss,
+                                           self._clock())
                 req.resolve({"tokens": toks, "stages": stgs,
                              "latency_ms": lat_ms,
                              "deadline_missed": miss, "lane": req.lane})

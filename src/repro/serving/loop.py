@@ -46,6 +46,9 @@ import numpy as np
 
 from repro.core import daes as DAES
 from repro.core import difficulty as DIFF
+from repro.obs import OBS
+from repro.obs import adapters as OBS_A
+from repro.obs import log as OBS_LOG
 from repro.serving.planner import AdmissionPlanner
 from repro.serving.queue import RequestQueue
 from repro.serving.request import Request, RequestRejected
@@ -119,6 +122,8 @@ class _BucketScheduler:
                          "flush_deadline": 0, "flush_size": 0,
                          "flush_hold": 0, "flush_forced": 0}
         self._thread = None
+        if OBS.enabled:
+            OBS_A.bind_scheduler(self)
         if start:
             self.start()
 
@@ -159,8 +164,8 @@ class _BucketScheduler:
                priority: int = 0, **kw) -> Future:
         """Enqueue one request; resolves to its per-request result dict
         (or raises RequestShed/RequestRejected under backpressure)."""
-        req = self._admit(x, deadline_ms, priority, now=self._clock(),
-                          **kw)
+        t0 = self._clock()
+        req = self._admit(x, deadline_ms, priority, now=t0, **kw)
         # The closed check and the push share the cv lock with close():
         # a request either lands before _closed is set (close's flush
         # serves it) or is rejected — never silently stranded in a lane
@@ -169,9 +174,11 @@ class _BucketScheduler:
             if self._closed:
                 req.fail(RequestRejected("scheduler is closed"))
                 return req.future
-            self.queue.push(req)
+            action = self.queue.push(req)
             self.counters["submitted"] += 1
             self._cv.notify()
+        if OBS.enabled:
+            OBS_A.record_admit(self, req, action, t0, self._clock())
         return req.future
 
     def close(self, wait: bool = True) -> None:
@@ -260,12 +267,18 @@ class _BucketScheduler:
         the engine fails THIS bucket's futures and the loop lives on
         (a shape-mismatched input would otherwise strand every pending
         future behind a dead daemon thread)."""
+        if OBS.enabled:
+            OBS_A.record_bucket(self, reqs, reason, self._clock())
         try:
             self._dispatch(reqs, reason)
         except Exception as e:                     # noqa: BLE001
             self.counters["dispatch_errors"] = \
                 self.counters.get("dispatch_errors", 0) + 1
             self.last_error = e
+            OBS_LOG.error("dispatch", "bucket dispatch failed", exc=e,
+                          reason=reason, lane=reqs[0].lane,
+                          n_requests=len(reqs),
+                          rids=[r.rid for r in reqs[:8]])
             for r in reqs:
                 r.fail(e)
 
@@ -307,6 +320,8 @@ class _BucketScheduler:
                 # work still fails fast through _dispatch_safe rather
                 # than hanging behind a dead loop).
                 self.last_error = e
+                OBS_LOG.error("scheduler", "scheduler loop error",
+                              exc=e, scheduler=type(self).__name__)
                 time.sleep(0.01)
 
     def _has_inflight(self) -> bool:
@@ -427,6 +442,9 @@ class AsyncDartServer(_BucketScheduler):
             self._complete(reqs, out, t_dispatch)
         except Exception as e:                     # noqa: BLE001
             self.last_error = e
+            OBS_LOG.error("complete", "bucket materialization failed",
+                          exc=e, lane=reqs[0].lane,
+                          rids=[r.rid for r in reqs[:8]])
             for r in reqs:
                 r.fail(e)
 
@@ -457,6 +475,8 @@ class AsyncDartServer(_BucketScheduler):
             self.daes.observe(r.lane, res["conf"], res["macs"],
                               res["alpha"])
         self.counters["completed"] += len(reqs)
+        if OBS.enabled:
+            OBS_A.record_completed(self, reqs, results, t_dispatch, now)
         for r, res in zip(reqs, results):
             r.resolve(res)
 
@@ -468,6 +488,7 @@ class AsyncDartServer(_BucketScheduler):
         s["scheduler"] = {
             **self.counters,
             "shed": self.queue.shed, "rejected": self.queue.rejected,
+            "starved": self.queue.starved,
             "queued": {k: self.queue.depth(k) for k in self.queue.keys()},
             "inflight": len(self._inflight),
             "depth_prior": self.planner.priors(),

@@ -41,6 +41,7 @@ class RequestQueue:
         self._lock = threading.Lock()
         self.shed = 0
         self.rejected = 0
+        self.starved = 0    # pop_next held capacity for a senior head
 
     # ------------------------------------------------------------------
     # admission
@@ -148,6 +149,7 @@ class RequestQueue:
                     return r
                 if now is not None \
                         and now - r.t_submit >= reserve_after_s:
+                    self.starved += 1
                     return None     # hold capacity for this head
             return None
 

@@ -1,0 +1,360 @@
+"""repro.obs: the serving observability layer.
+
+Covers, per the PR 8 acceptance list:
+
+* metrics registry round-trip — what ``render()`` writes,
+  ``parse_prometheus`` reads back verbatim (incl. escaped labels and
+  histogram series), and the percentile estimator agrees between the
+  registry and the dashboard;
+* the tracer ring — bounded, drop-oldest, corruption-free on overflow,
+  Chrome ``trace_event`` export loads as one track per lane;
+* disabled mode is INERT: serving a seeded stream with obs off records
+  nothing, registers nothing, and produces bit-identical outputs to the
+  same stream served with obs ON (tracing must never perturb results);
+* enabled mode RECONCILES: the sum of per-span exits equals the
+  EngineState telemetry exit histogram after the ``stats()`` reduction,
+  and every cataloged metric family shows up in the exposition;
+* exporters — textfile + stdlib http endpoint serve parseable text, and
+  ``tools/dartop.py --once --json`` consumes it end to end;
+* structured logging — a dispatcher failure logs a ``repro.obs.*``
+  record and counts ``dart_errors_total``, instead of only failing the
+  future silently;
+* continuous batching — slot spans carry slot ids, occupancy gauges
+  export, and obs-on does not add compiled-step retraces
+  (``trace_counts`` stays 1 per key).
+"""
+import json
+import logging
+import subprocess
+import sys
+import urllib.request
+from concurrent.futures import Future
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.obs as obs
+from repro.core.routing import DartParams
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.engine import DartEngine, LMDecodeEngine
+from repro.models.transformer_lm import LMConfig, lm_init
+from repro.models.vit import ViTConfig, vit_init
+from repro.obs import metrics as M
+from repro.obs import trace as T
+from repro.obs.stats import SUMMARY_KEYS
+from repro.parallel.sharding import unzip
+from repro.serving import AsyncDartServer, SchedulerConfig
+from repro.serving.loop import _BucketScheduler
+from repro.serving.request import Request
+
+ROOT = Path(__file__).resolve().parent.parent
+DATA = DatasetConfig(name="synth-cifar", n_train=128, n_eval=128)
+
+LM_CFG = LMConfig(name="lm-obs-t", n_layers=4, d_model=32, n_heads=2,
+                  n_kv_heads=1, d_ff=64, vocab=32, exit_layers=(0, 2),
+                  max_seq=64, remat=False)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs.reset()
+    yield
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def vit_engine_factory():
+    vc = ViTConfig(name="vt-obs", img_res=32, patch=8, n_layers=3,
+                   d_model=32, n_heads=2, d_ff=64, n_classes=10,
+                   exit_layers=(0, 1))
+    params, _ = unzip(vit_init(jax.random.key(0), vc))
+
+    def make(**kw):
+        kw.setdefault("cum_costs", [0.4, 0.7, 1.0])
+        kw.setdefault("adapt", True)
+        kw.setdefault("update_every", 10 ** 9)
+        return DartEngine.from_config(
+            vc, params,
+            dart=DartParams(tau=jnp.full((2,), 0.2), coef=jnp.ones(2),
+                            beta_diff=0.3), **kw)
+    return make
+
+
+@pytest.fixture(scope="module")
+def eval_images():
+    x, _ = make_batch(DATA, range(64), split="eval")
+    return np.asarray(x)
+
+
+def _serve_stream(engine, images):
+    """Serve the images 4-at-a-time through a threaded server; returns
+    (per-request results, server stats, the closed server).  Callers
+    that scrape afterwards must keep the server referenced — the pull
+    collector is weakref-bound to it."""
+    srv = AsyncDartServer(engine, SchedulerConfig(max_batch=8,
+                                                  flush_ms=1.0))
+    futs = [srv.submit(images[i:i + 4], deadline_ms=10_000)
+            for i in range(0, len(images), 4)]
+    outs = [f.result(timeout=120) for f in futs]
+    srv.close()
+    return outs, srv.stats(), srv
+
+
+# ---------------------------------------------------------------------------
+# metrics: exposition round-trip
+# ---------------------------------------------------------------------------
+def test_counter_roundtrip_with_escaped_labels():
+    r = M.Registry()
+    nasty = 'quo"te\\back\nnewline'
+    r.counter("dart_x_total", "help with\nnewline", ("lane",)).inc(
+        3, lane=nasty)
+    fams = M.parse_prometheus(r.render())
+    assert fams["dart_x_total"]["type"] == "counter"
+    assert fams["dart_x_total"]["help"] == "help with\nnewline"
+    [(name, labels, value)] = fams["dart_x_total"]["samples"]
+    assert (name, labels["lane"], value) == ("dart_x_total", nasty, 3.0)
+
+
+def test_histogram_exposition_and_percentile():
+    r = M.Registry()
+    h = r.histogram("lat_ms", "x", ("lane",), buckets=(1, 10, 100))
+    for v in (0.5, 5, 5, 50):
+        h.observe(v, lane="a")
+    fams = M.parse_prometheus(r.render())
+    fam = fams["lat_ms"]
+    assert fam["type"] == "histogram"
+    by_le = {lab["le"]: v for n, lab, v in fam["samples"]
+             if n == "lat_ms_bucket"}
+    assert by_le == {"1": 1.0, "10": 3.0, "100": 4.0, "+Inf": 4.0}
+    [(_, _, total)] = [s for s in fam["samples"] if s[0] == "lat_ms_sum"]
+    assert total == pytest.approx(60.5)
+    # registry estimator == dashboard estimator, cumulative -> counts
+    assert h.percentile(50, lane="a") == pytest.approx(
+        M.estimate_percentile((1, 10, 100), [1, 2, 1, 0], 50))
+
+
+def test_registry_redeclaration_must_agree():
+    r = M.Registry()
+    c = r.counter("n_total", "x", ("lane",))
+    assert r.counter("n_total", "x", ("lane",)) is c
+    with pytest.raises(ValueError):
+        r.counter("n_total", "x", ("member",))
+    with pytest.raises(ValueError):
+        r.gauge("n_total", "x", ("lane",))
+    with pytest.raises(ValueError):
+        c.inc(1, wrong="label")
+
+
+def test_collectors_raising_or_dead_are_dropped():
+    r = M.Registry()
+    calls = []
+    r.register_collector(lambda reg: calls.append("ok"))
+    r.register_collector(lambda reg: "dead")
+    r.register_collector(lambda reg: 1 / 0)
+    r.collect()
+    r.collect()
+    assert calls == ["ok", "ok"]       # survivor ran twice
+    with r._lock:
+        assert len(r._collectors) == 1  # dead + raising removed
+
+
+# ---------------------------------------------------------------------------
+# tracer ring
+# ---------------------------------------------------------------------------
+def test_ring_overflow_drops_oldest_without_corruption():
+    tr = T.Tracer(capacity=8)
+    for i in range(100):
+        tr.record("admit", ts=float(i), rid=i, lane=i % 3)
+    spans = tr.spans()
+    assert [s["rid"] for s in spans] == list(range(92, 100))
+    assert len(tr) == 8 and tr.dropped == 92
+    assert all(s["ts"] == float(s["rid"]) for s in spans)
+    tr.clear()
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_chrome_trace_tracks_per_lane(tmp_path):
+    tr = T.Tracer()
+    tr.record("queue_wait", ts=1.0, dur=0.5, rid=0, lane=(0, 1))
+    tr.record("compiled_step", ts=1.5, dur=0.25, rid=0, lane=(0, 1),
+              n=np.int64(4))
+    tr.record("exit", ts=2.0, rid=1, lane=(1, 0),
+              exits=np.asarray([2, 2]))
+    path = tmp_path / "spans.jsonl"
+    assert tr.export_jsonl(str(path)) == 3
+    doc = T.chrome_trace(T.load_jsonl(str(path)))
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    xs = [e for e in events if e["ph"] == "X"]
+    assert len(meta) == 2 and len(xs) == 3      # one track per lane
+    assert {e["tid"] for e in xs} == {m["tid"] for m in meta}
+    assert xs[0]["ts"] == pytest.approx(1.0e6)  # seconds -> micros
+    assert xs[0]["dur"] == pytest.approx(0.5e6)
+    json.dumps(doc)                              # fully serializable
+
+
+# ---------------------------------------------------------------------------
+# disabled mode is inert; enabled mode reconciles
+# ---------------------------------------------------------------------------
+def test_disabled_inert_and_bit_identical(vit_engine_factory, eval_images):
+    assert not obs.is_enabled()
+    off, _, _ = _serve_stream(vit_engine_factory(), eval_images)
+    assert len(obs.get_tracer()) == 0
+    assert "dart_" not in obs.get_registry().render()
+
+    obs.configure(enabled=True)
+    on, _, _srv = _serve_stream(vit_engine_factory(), eval_images)
+    assert len(obs.get_tracer()) > 0
+    for a, b in zip(off, on):
+        for k in ("pred", "conf", "exit_idx", "alpha", "macs"):
+            assert np.array_equal(a[k], b[k]), k
+
+
+def test_spans_reconcile_with_engine_telemetry(vit_engine_factory,
+                                               eval_images):
+    obs.configure(enabled=True)
+    eng = vit_engine_factory()
+    _, stats, srv = _serve_stream(eng, eval_images)
+    for k in SUMMARY_KEYS:
+        assert k in stats
+    span_exits = np.zeros(eng.n_exits, np.int64)
+    for s in obs.get_tracer().spans("exit"):
+        for e in s["exits"]:
+            span_exits[int(e)] += 1
+    assert np.array_equal(span_exits, np.asarray(stats["exit_counts"]))
+    assert stats["scheduler"]["starved"] == 0
+    # one admit + queue_wait + compiled_step per request
+    n_req = len(eval_images) // 4
+    assert len(obs.get_tracer().spans("admit")) == n_req
+    assert len(obs.get_tracer().spans("queue_wait")) == n_req
+
+    fams = M.parse_prometheus(obs.get_registry().render())
+    for fam in ("dart_requests_total", "dart_requests_completed_total",
+                "dart_request_latency_ms", "dart_exits_total",
+                "dart_flushes_total", "dart_lane_daes",
+                "dart_lane_speedup", "dart_lane_power_eff",
+                "dart_depth_prior", "dart_queue_depth",
+                "dart_scheduler_events_total", "dart_engine_latency_ms",
+                "dart_engine_exits_total", "dart_trace_total",
+                "dart_recompiles_total", "dart_kernel_dispatch_total"):
+        assert fam in fams, fam
+    # counters mirror the scheduler's own view
+    comp = sum(v for n, lab, v in
+               fams["dart_requests_completed_total"]["samples"])
+    assert comp == stats["scheduler"]["completed"] == n_req
+
+
+# ---------------------------------------------------------------------------
+# exporters + dashboard
+# ---------------------------------------------------------------------------
+def test_textfile_http_and_dartop_roundtrip(vit_engine_factory,
+                                            eval_images, tmp_path):
+    prom = tmp_path / "metrics.prom"
+    obs.configure(enabled=True, textfile=str(prom), http_port=0)
+    _, _, srv = _serve_stream(vit_engine_factory(), eval_images)
+    obs.flush_textfile()
+
+    # the http endpoint serves the same (parseable) exposition
+    port = obs.OBS.http_port
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=10) as r:
+        assert r.headers["Content-Type"].startswith("text/plain")
+        fams = M.parse_prometheus(r.read().decode())
+    assert "dart_requests_total" in fams
+    assert "dart_request_latency_ms" in fams
+
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "dartop.py"),
+         "--once", "--json", "--file", str(prom)],
+        capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    view = json.loads(out.stdout)
+    assert view["scheduler"]["completed"] == len(eval_images) // 4
+    assert view["latency_ms"]                       # per-lane p50/p95
+    for d in view["latency_ms"].values():
+        assert set(d) == {"p50", "p95", "count"}
+    assert sum(sum(h.values()) for h in view["exits"].values()) \
+        == len(eval_images)
+    assert view["recompiles"] == 0
+
+
+# ---------------------------------------------------------------------------
+# structured logging on dispatcher failure (satellite 2)
+# ---------------------------------------------------------------------------
+class _Boom(RuntimeError):
+    pass
+
+
+class _FailingScheduler(_BucketScheduler):
+    def _admit(self, x, deadline_ms, priority, *, now, **kw):
+        return Request(rid=next(self._rid), x=np.asarray(x), n=1,
+                       alpha=np.zeros(1, np.float32), lane=0,
+                       predicted_cost=1.0, priority=priority,
+                       t_submit=now, deadline_s=None, future=Future())
+
+    def _dispatch(self, reqs, reason):
+        raise _Boom("engine exploded")
+
+
+def test_dispatch_failure_is_logged_and_counted(caplog):
+    sched = _FailingScheduler(SchedulerConfig(), start=False)
+    fut = sched.submit(np.zeros(3))
+    with caplog.at_level(logging.ERROR, logger="repro.obs"):
+        sched.flush()
+    with pytest.raises(_Boom):
+        fut.result(timeout=5)
+    assert sched.counters["dispatch_errors"] == 1
+    errs = obs.get_registry().counter(
+        "dart_errors_total", "scheduler/dispatcher errors by component",
+        ("component",))
+    assert errs.value(component="dispatch") == 1
+    rec = [r for r in caplog.records
+           if r.name == "repro.obs.dispatch"]
+    assert rec and "bucket dispatch failed" in rec[0].getMessage()
+    assert "rids=" in rec[0].getMessage()
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: slot spans, occupancy gauges, no retraces
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def lm_engine():
+    params = unzip(lm_init(jax.random.key(0), LM_CFG))[0]
+    return LMDecodeEngine(LM_CFG, params, DartParams(
+        tau=jnp.full((2,), 0.0), coef=jnp.ones(2), beta_diff=0.1))
+
+
+def test_continuous_slot_spans_and_occupancy(lm_engine):
+    obs.configure(enabled=True)
+    sess = lm_engine.session(continuous=True, n_slots=4, page_size=4,
+                             max_len=16, start=False)
+    rs = np.random.RandomState(3)
+    futs = [sess.submit(rs.randint(0, LM_CFG.vocab, (1, 4)), n_new=3)
+            for _ in range(5)]
+    sess.flush()
+    for f in futs:
+        f.result(timeout=120)
+
+    slot_spans = obs.get_tracer().spans("slot")
+    assert len(slot_spans) == 5
+    assert all(s["slots"] for s in slot_spans)       # real slot ids
+    exits = obs.get_tracer().spans("exit")
+    assert sum(s["n_tokens"] for s in exits) == 5 * 3
+
+    fams = M.parse_prometheus(obs.get_registry().render())
+    occ = {n: fams[n]["samples"][0][2]
+           for n in ("dart_slots_total", "dart_pages_total",
+                     "dart_pages_peak", "dart_slots_in_use",
+                     "dart_pages_in_use")}
+    assert occ["dart_slots_total"] == 4
+    assert occ["dart_pages_peak"] >= 1
+    assert occ["dart_slots_in_use"] == 0             # all retired
+    assert "dart_lm_tokens_total" in fams
+    assert "starved" in sess.stats()["scheduler"]
+    # obs-on added no compiled-step retraces
+    assert all(c == 1 for c in lm_engine.trace_counts.values())
+    assert lm_engine.trace_counts
