@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test smoke engine-test bench bench-serving bench-async bench-lm \
-    bench-cascade bench-kernels bench-obs dartop perf-check docs-check deps
+    bench-cascade bench-predict bench-kernels bench-obs dartop perf-check \
+    docs-check deps
 
 # Tier-1 verify (ROADMAP): docs lint + the full test suite, fail-fast.
 test: docs-check
@@ -41,6 +42,12 @@ bench-lm:
 # artifacts/perf/serving_cascade.json).
 bench-cascade:
 	$(PY) -m benchmarks.serving_cascade
+
+# Admission-time exit-depth prediction A/B: predictor-on vs predictor-off
+# (on beats off on sustained throughput at equal p95, DAES no worse;
+# JSON to artifacts/perf/serving_predict.json).
+bench-predict:
+	$(PY) -m benchmarks.serving_predict
 
 # Fused-kernel microbenchmarks vs the composed XLA reference chains
 # (dispatch backends + the >=1.3x acceptance gate; JSON to

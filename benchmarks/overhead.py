@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import difficulty as DIFF
-from repro.kernels.difficulty import ops as dops
 
 
 def racenet_style_mlp_params(n_layers=8, feat_dims=(64, 192, 384, 256, 256,

@@ -18,6 +18,14 @@ artifact upload.
 gated metric against the committed ``benchmarks/baselines/smoke.json``
 (ratio metrics only, so the gate survives CI machine variance; the
 absolute numbers ride along in the JSON artifact for the trajectory).
+A baseline metric may carry ``min_cpus``: on hosts with fewer cores the
+metric is SKIPPED with an annotation in ``check.json`` (serving
+speedup ratios on a 1-core box are dominated by scheduler/dispatcher
+core contention, not by the thing being gated).  A benchmark
+subprocess's own strict PASS verdict (its exit code) is advisory once
+its gated metrics all pass or are skipped — the committed floor is the
+CI verdict; per-key returncodes are recorded in ``smoke.json`` either
+way.
 """
 import os
 import sys
@@ -146,7 +154,7 @@ def smoke_cell():
     import subprocess
     env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
     os.makedirs(OUT, exist_ok=True)
-    summary, rc = {}, 0
+    summary, rcs, rc = {}, {}, 0
     # the continuous cell runs LAST: the cascade sweep's SLO verdicts
     # are the most sensitive to this container's burst throttling, so
     # it keeps its historical slot right after the LM sweep
@@ -157,6 +165,8 @@ def smoke_cell():
              "serving_cascade"),
             ("continuous LM serving", "benchmarks.serving_lm",
              ("--continuous",), "serving_lm_cont"),
+            ("exit-prediction serving", "benchmarks.serving_predict",
+             (), "serving_predict"),
             ("observability overhead", "benchmarks.serving_async",
              ("--smoke",), "obs")):
         print(f"===== §Perf smoke: {title} (measured) =====")
@@ -167,11 +177,15 @@ def smoke_cell():
             os.remove(out_json)
         r = subprocess.run([sys.executable, "-m", mod, "--smoke",
                             *extra], env=env)
+        rcs[key] = r.returncode
         rc = rc or r.returncode
         if os.path.exists(out_json):
             with open(out_json) as f:
                 summary[key] = json.load(f)
     summary["ok"] = rc == 0
+    # per-key verdicts so check_cell can tell a benchmark whose own
+    # strict PASS bar failed apart from one that crashed
+    summary["rc"] = rcs
     summary["meta"] = _artifact_meta()
     with open(os.path.join(OUT, "smoke.json"), "w") as f:
         json.dump(summary, f, indent=1)
@@ -211,44 +225,101 @@ def _lookup(tree, dotted):
 def check_cell(baseline_path=BASELINE):
     """Regression gate: run the smoke sweep, then compare every gated
     metric against the committed baseline; any metric more than
-    ``tolerance`` (default 15%) BELOW baseline fails the job."""
+    ``tolerance`` (default 15%) BELOW baseline fails the job.
+
+    Deflaked for small runners: a baseline metric carrying
+    ``min_cpus`` is SKIPPED (never silently — the decision lands in
+    ``check.json["skipped"]`` and the console) when the host has fewer
+    cores, because serving speedup ratios on a 1-core box measure
+    dispatcher/submitter core contention rather than the gated
+    mechanism.  A benchmark subprocess's own nonzero exit (its internal
+    strict PASS bar) is tolerated — annotated, not fatal — as long as
+    every gated metric under its key either passed the committed floor
+    or was cpu-skipped: the committed floor is the CI verdict, the
+    internal bar is for humans iterating locally.  A crash still fails
+    (its artifact is missing, so its gated metrics read MISSING)."""
     rc = smoke_cell()
-    if rc:
-        print("perf check: smoke run itself failed")
-        return rc
+    smoke_path = os.path.join(OUT, "smoke.json")
+    if not os.path.exists(smoke_path):
+        print("perf check: smoke run produced no artifact")
+        return rc or 1
     with open(baseline_path) as f:
         base = json.load(f)
-    with open(os.path.join(OUT, "smoke.json")) as f:
+    with open(smoke_path) as f:
         cur = json.load(f)
     tol = float(base.get("tolerance", 0.15))
-    failures = []
-    print(f"\n===== §Perf regression check (tolerance {tol:.0%}) =====")
+    cpus = os.cpu_count() or 1
+    failures, skipped, checked = [], [], {}
+    print(f"\n===== §Perf regression check (tolerance {tol:.0%}, "
+          f"{cpus} cpu(s)) =====")
     for name, want in base["metrics"].items():
         # a metric may carry its own tolerance: {"value": v,
         # "tolerance": t} — the obs.overhead gate is 5%, much tighter
-        # than the 15% throughput-variance default
-        m_tol = tol
+        # than the 15% throughput-variance default — and/or a
+        # ``min_cpus`` floor below which the metric is skipped
+        m_tol, min_cpus = tol, 1
         if isinstance(want, dict):
             m_tol = float(want.get("tolerance", tol))
+            min_cpus = int(want.get("min_cpus", 1))
             want = float(want["value"])
-        got = float(_lookup(cur, name))
+        if cpus < min_cpus:
+            reason = (f"host has {cpus} cpu(s) < min_cpus={min_cpus}: "
+                      "ratio is dominated by core contention between "
+                      "the benchmark's serving threads, not by the "
+                      "gated mechanism")
+            skipped.append({"metric": name, "min_cpus": min_cpus,
+                            "cpus": cpus, "reason": reason})
+            print(f"  {name}: SKIPPED — {reason}")
+            continue
+        try:
+            got = float(_lookup(cur, name))
+        except (KeyError, TypeError):
+            print(f"  {name}: MISSING from smoke artifacts  REGRESSED")
+            failures.append(name)
+            continue
+        checked[name] = got
         floor = want * (1.0 - m_tol)
         status = "OK " if got >= floor else "REGRESSED"
         print(f"  {name}: baseline {want:.3f}  current {got:.3f}  "
               f"floor {floor:.3f}  {status}")
         if got < floor:
             failures.append(name)
+    # per-key subprocess verdicts (smoke_cell records each benchmark's
+    # exit code): advisory unless a gated metric under the key failed
+    # or the key has no gated coverage at all
+    per_key: dict = {}
+    for name in base["metrics"]:
+        per_key.setdefault(name.split(".")[0], []).append(name)
+    skipped_names = {s["metric"] for s in skipped}
+    rc_failures = []
+    for key, code in sorted(cur.get("rc", {}).items()):
+        if not code:
+            continue
+        gated = per_key.get(key, [])
+        if gated and not any(n in failures for n in gated):
+            why = ("all gated metrics cpu-skipped"
+                   if all(n in skipped_names for n in gated)
+                   else "gated metrics within committed floor")
+            print(f"  {key}: internal verdict rc={code} tolerated "
+                  f"({why})")
+            continue
+        print(f"  {key}: subprocess FAILED (rc={code})")
+        rc_failures.append(key)
     report = {"baseline": base["metrics"], "tolerance": tol,
-              "current": {n: float(_lookup(cur, n))
-                          for n in base["metrics"]},
-              "failures": failures, "ok": not failures,
+              "cpus": cpus, "current": checked, "skipped": skipped,
+              "subprocess_rc": cur.get("rc", {}),
+              "rc_failures": rc_failures, "failures": failures,
+              "ok": not failures and not rc_failures,
               "meta": _artifact_meta()}
     with open(os.path.join(OUT, "check.json"), "w") as f:
         json.dump(report, f, indent=1)
-    if failures:
-        print(f"perf check: FAIL — regressed metrics: {failures}")
+    if failures or rc_failures:
+        print(f"perf check: FAIL — regressed metrics: {failures}, "
+              f"failed benchmarks: {rc_failures}")
         return 1
-    print("perf check: PASS")
+    print("perf check: PASS"
+          + (f" ({len(skipped)} metric(s) skipped for cpu count — "
+             "see check.json)" if skipped else ""))
     return 0
 
 
@@ -292,8 +363,16 @@ def serving_cell():
           "should beat serving everything through the big member")
     r4 = subprocess.run(
         [sys.executable, "-m", "benchmarks.serving_cascade"], env=env)
+    print("\n===== §Perf cell: exit-prediction serving (measured) =====")
+    print("    hypothesis: ruling stages out at admission (head-skip) "
+          "removes exit-head + gate launches the oracle must pay, and "
+          "predicted-depth lanes keep a bucket's rows exiting together, "
+          "so predictor-on sustained samples/s at equal p95 should beat "
+          "predictor-off with DAES no worse")
+    r5 = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_predict"], env=env)
     return r1.returncode or r2.returncode or r3.returncode \
-        or r4.returncode
+        or r4.returncode or r5.returncode
 
 
 def main():

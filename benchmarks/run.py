@@ -7,7 +7,6 @@ Budget: REPRO_BENCH_BUDGET = quick (default) | std | full.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -6,13 +6,11 @@ import dataclasses
 import json
 import os
 
-import numpy as np
 
 from repro.configs import registry
 from repro.data.datasets import DatasetConfig
 from repro.models.cnn_zoo import levit_macs
-from benchmarks.common import (SCALE, evaluate_methods, print_rows,
-                               train_model)
+from benchmarks.common import SCALE, evaluate_methods, train_model
 
 CIFAR = DatasetConfig(name="synth-cifar", img_res=32, channels=3,
                       n_train=4096, n_eval=2048)

@@ -11,7 +11,6 @@ deeper exits near the end of the trajectory.
 
 Run:  PYTHONPATH=src python examples/dit_early_exit.py
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

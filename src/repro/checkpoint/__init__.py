@@ -1,2 +1,5 @@
 from repro.checkpoint.checkpoint import (save, save_async, restore,
                                          latest_step, CheckpointManager)
+
+__all__ = ["save", "save_async", "restore", "latest_step",
+           "CheckpointManager"]

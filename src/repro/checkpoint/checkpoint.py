@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import os
 import shutil
-import threading
 import zlib
 from concurrent.futures import Future, ThreadPoolExecutor
 

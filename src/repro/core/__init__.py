@@ -13,3 +13,7 @@ from repro.core import (adaptive, baselines, daes, difficulty, policy,
 from repro.core.routing import DartParams
 from repro.core.policy import CalibrationData, PolicyResult
 from repro.core.difficulty import DifficultyConfig
+
+__all__ = ["adaptive", "baselines", "daes", "difficulty", "policy",
+           "routing", "thresholds", "DartParams", "CalibrationData",
+           "PolicyResult", "DifficultyConfig"]

@@ -14,11 +14,9 @@ adaptation driven by the same sliding-window statistics (paper §II.C.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 STRATEGIES = ("temporal", "class_aware", "hybrid", "frozen")
 

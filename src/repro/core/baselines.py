@@ -15,7 +15,6 @@ import dataclasses
 import numpy as np
 
 from repro.core.policy import CalibrationData
-from repro.core import thresholds as TH
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ Confidence functionals per family:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -60,6 +60,40 @@ def select_exit(conf_stack, eff_thresholds):
     return exit_idx, exited_conf
 
 
+def ruled_out_stages(tau, coef, beta_diff, alpha_lo, conf_max=1.0):
+    """Which gates can provably NEVER fire for any input with
+    difficulty ≥ ``alpha_lo`` under the CURRENT policy (host-side).
+
+    Alg. 1 fires gate s iff ``conf > clip(c_s·τ_s + β_diff·α, 0, 1)``
+    (strict).  Confidence functionals bounded above by ``conf_max``
+    (max-softmax and the LM token head are ≤ 1.0 by construction)
+    therefore can never fire once the UNCLIPPED Eq. 19 threshold
+    reaches ``conf_max``; and with β_diff ≥ 0 the threshold is
+    monotone nondecreasing in α, so checking the bucket's smallest
+    difficulty bounds every row.  Returns a (E-1,) bool mask —
+    ``True`` = gate s is ruled out, sound to skip."""
+    tau = np.asarray(tau, np.float64)
+    coef = np.asarray(coef, np.float64)
+    if float(beta_diff) < 0.0:      # threshold no longer monotone in α
+        return np.zeros(tau.shape, bool)
+    return (coef * tau + float(beta_diff) * float(alpha_lo)
+            >= float(conf_max))
+
+
+def min_exit_bound(tau, coef, beta_diff, alpha_lo, conf_max=1.0):
+    """Largest m such that gates 0..m-1 are ALL ruled out for every
+    input with difficulty ≥ ``alpha_lo`` (see ``ruled_out_stages``) —
+    the sound per-bucket ``min_exit`` the serving predictor hands to
+    the engines' head-skip path.  0 = nothing can be skipped."""
+    ruled = ruled_out_stages(tau, coef, beta_diff, alpha_lo, conf_max)
+    m = 0
+    for r in ruled:
+        if not r:
+            break
+        m += 1
+    return m
+
+
 def exit_distribution(exit_idx, n_exits):
     """π_i — empirical exit distribution (Eq. 10's π)."""
     return jnp.mean(jax.nn.one_hot(exit_idx, n_exits), axis=0)

@@ -52,3 +52,9 @@ from repro.engine.registry import (get_confidence, get_difficulty,
                                    route_policy)
 from repro.engine.sharded import ShardedDartEngine
 from repro.engine.state import EngineState
+
+__all__ = ["registry", "BatchCompactor", "BatchTooLarge", "DartEngine",
+           "LMDecodeEngine", "get_confidence", "get_difficulty",
+           "get_optimizer", "register_confidence", "register_difficulty",
+           "register_optimizer", "route_policy", "ShardedDartEngine",
+           "EngineState"]

@@ -198,6 +198,7 @@ class DartEngine:
         pol = self._opt_fn(data, **kw)
         self.state = self.state.with_policy(
             tau=pol.tau, coef=pol.coef, beta_diff=pol.beta_diff)
+        self._policy_mirror = None
         return pol
 
     # ------------------------------------------------------------------
@@ -216,6 +217,37 @@ class DartEngine:
         if self.adapt:
             return AD.effective_coef(self.state.adaptive, self.acfg)
         return self.state.coef
+
+    #: confidence functionals bounded above by 1.0 — the precondition
+    #: for the sound head-skip bound (core.thresholds.min_exit_bound)
+    _BOUNDED_CONF = ("softmax-max", "lm-token")
+
+    def min_exit_bound(self, alpha_lo: float = 0.0) -> int:
+        """Sound per-bucket head-skip depth under the CURRENT policy:
+        the number of leading gates Eq. 19 provably rules out for every
+        input with difficulty ≥ ``alpha_lo`` (see ``core.thresholds.
+        min_exit_bound``).  Returns 0 (skip nothing) for confidence
+        functionals without a known upper bound."""
+        if self.confidence not in self._BOUNDED_CONF or self.n_exits < 2:
+            return 0
+        tau, coef, beta_diff = self._policy_host()
+        return TH.min_exit_bound(tau, coef, beta_diff, alpha_lo)
+
+    def _policy_host(self):
+        """Host mirror of (tau, effective coef, beta_diff), cached so
+        admission-time bound checks never force a device sync of the
+        serving state per dispatch.  Invalidated explicitly by
+        calibrate()/update()/restore_state() (the §II.C coefficient
+        path) and implicitly by ``with_policy`` installs (the cache is
+        keyed on the tau/coef leaf identities, which those replace)."""
+        key = (id(self.state.tau), id(self.state.coef))
+        cached = getattr(self, "_policy_mirror", None)
+        if cached is None or cached[0] != key:
+            self._policy_mirror = (key, (
+                np.asarray(self.state.tau, np.float32),
+                np.asarray(self._coef(), np.float32),
+                float(self.state.beta_diff)))
+        return self._policy_mirror[1]
 
     def bucket_key(self, n: int) -> int:
         """THE compile-cache key for an ``n``-sample batch: the
@@ -252,7 +284,8 @@ class DartEngine:
     # inference
     # ------------------------------------------------------------------
     def infer(self, x, mode: str = "compacted", record: bool | None = None,
-              alpha=None, pad_to: int | None = None) -> dict:
+              alpha=None, pad_to: int | None = None,
+              min_exit: int = 0) -> dict:
         """Serve one request batch.
 
         mode="masked"    — full forward, Alg. 1 on stacked confidences.
@@ -269,13 +302,24 @@ class DartEngine:
                  shape (normally ``engine.bucket_key(B)``) so arbitrary
                  request-consolidation sizes reuse one compiled forward
                  per bucket.  Padding never reaches outputs or telemetry.
-                 The sharded engine ignores it (it pads internally)."""
+                 The sharded engine ignores it (it pads internally).
+        min_exit — head-skip depth: gates s < min_exit are skipped (no
+                 exit head, no Alg. 1 gate).  With the CONSERVATIVE
+                 bound (``engine.min_exit_bound(min(alpha))``) those
+                 gates provably never fire, so decisions are unchanged
+                 — compacted mode then skips their launches and host
+                 syncs; masked mode computes every exit anyway and
+                 ignores it."""
+        if not 0 <= int(min_exit) < self.n_exits:
+            raise ValueError(f"min_exit {min_exit} out of range for "
+                             f"{self.n_exits} exits")
         if mode == "masked":
             return self._infer_masked(x, record=bool(record), alpha=alpha,
                                       pad_to=pad_to)
         if mode == "compacted":
             record = True if record is None else record
-            return self._infer_compacted(x, record=record, alpha=alpha)
+            return self._infer_compacted(x, record=record, alpha=alpha,
+                                         min_exit=int(min_exit))
         raise ValueError(f"unknown mode {mode!r}; known: masked, compacted")
 
     # -- masked ---------------------------------------------------------
@@ -315,7 +359,8 @@ class DartEngine:
         return res
 
     # -- compacted ------------------------------------------------------
-    def _infer_compacted(self, x, record: bool = True, alpha=None) -> dict:
+    def _infer_compacted(self, x, record: bool = True, alpha=None,
+                         min_exit: int = 0) -> dict:
         b = x.shape[0]
         if b > self.compactor.max_bucket:
             # One request = one policy: chunks are recorded but the §II.C
@@ -324,18 +369,21 @@ class DartEngine:
             # (and compacted stays bit-identical to masked).
             parts = [self._infer_compacted_chunk(
                 x[a:z], record=record,
-                alpha=None if alpha is None else alpha[a:z])
+                alpha=None if alpha is None else alpha[a:z],
+                min_exit=min_exit)
                 for a, z in self.compactor.chunks(b)]
             out = {k: np.concatenate([p[k] for p in parts])
                    for k in ("pred", "conf", "exit_idx", "alpha", "macs")}
             out["latency_s"] = sum(p["latency_s"] for p in parts)
         else:
-            out = self._infer_compacted_chunk(x, record=record, alpha=alpha)
+            out = self._infer_compacted_chunk(x, record=record, alpha=alpha,
+                                              min_exit=min_exit)
         if record:
             self._maybe_update()
         return out
 
-    def _infer_compacted_chunk(self, x, record: bool, alpha=None) -> dict:
+    def _infer_compacted_chunk(self, x, record: bool, alpha=None,
+                               min_exit: int = 0) -> dict:
         if not self.family.staged:
             raise ValueError(
                 f"compacted mode needs a staged family; "
@@ -364,6 +412,11 @@ class DartEngine:
             bucket = self.bucket_key(n)
             h_pad = self.compactor.pad(h_active, bucket)
             h_pad = self._stage[s](self.params, h_pad)
+            if s < min_exit and s < self.n_exits - 1:
+                # gate ruled out for every row (predictor head-skip):
+                # no exit head, no Alg. 1 gate, no fire/conf host sync
+                h_active = h_pad[:n]
+                continue
             logits = self._exit[s](self.params, h_pad)
             if s < self.n_exits - 1:
                 eff = np.asarray(TH.stage_threshold(
@@ -438,12 +491,18 @@ class DartEngine:
                                       beta_opt=float(s.beta_opt))
         self.state = dataclasses.replace(
             s, adaptive=adaptive, since_update=jnp.zeros((), jnp.int32))
+        self._policy_mirror = None
 
     def record_requests(self, latencies_ms, missed=None) -> None:
         """Fold completed-request latency/deadline telemetry into the
         engine state (host-side write; the async scheduler calls this
         once per flushed bucket)."""
         self.state = ST.record_requests(self.state, latencies_ms, missed)
+
+    def record_quotes(self, quotes_ms, realized_ms) -> None:
+        """Fold admission-time SLO quote error telemetry (quote vs
+        realized latency; host-side write, like record_requests)."""
+        self.state = ST.record_quotes(self.state, quotes_ms, realized_ms)
 
     def stats(self) -> dict:
         """Serving counters + windowed §II.C statistics."""
@@ -471,6 +530,7 @@ class DartEngine:
         # Pre-latency-telemetry checkpoints restore through the shared
         # prefix migration (state.LEGACY_FIELDS).
         self.state, step = ST.restore_with_migration(path, self.state, step)
+        self._policy_mirror = None
         return step
 
     # ------------------------------------------------------------------

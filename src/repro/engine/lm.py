@@ -238,6 +238,50 @@ class LMDecodeEngine:
         """The routing-parameter view (reads the live EngineState)."""
         return self.state.dart
 
+    #: confidence functionals provably bounded above by 1.0, for which
+    #: the Eq. 19 rule-out bound is sound (see thresholds.min_exit_bound)
+    _BOUNDED_CONF = ("softmax-max", "lm-token")
+
+    def min_exit_bound(self, alpha_lo: float = 0.0) -> int:
+        """Sound per-batch ``min_exit`` under the CURRENT policy: gates
+        0..m-1 can never fire for any row with decode-time difficulty
+        ≥ ``alpha_lo``.  The routing alpha is the Eq. 8 decode EMA
+        (infimum 0.0), so callers without a tighter bound pass 0.0."""
+        if self.confidence not in self._BOUNDED_CONF or self.n_exits < 2:
+            return 0
+        tau, coef, beta_diff = self._policy_host()
+        return TH.min_exit_bound(tau, coef, beta_diff, alpha_lo)
+
+    def _policy_host(self):
+        """Host mirror of (tau, coef, beta_diff), cached on the array
+        identities so the serving hot path never re-syncs policy."""
+        key = (id(self.state.tau), id(self.state.coef))
+        cached = getattr(self, "_policy_mirror", None)
+        if cached is None or cached[0] != key:
+            self._policy_mirror = (key, (
+                np.asarray(self.state.tau, np.float32),
+                np.asarray(self.state.coef, np.float32),
+                float(self.state.beta_diff)))
+        return self._policy_mirror[1]
+
+    def prompt_alpha(self, prompt_tokens) -> np.ndarray:
+        """Admission-time Eq. 8 difficulty of a prompt batch (B, S):
+        the token-domain estimator over the input embeddings — what the
+        exit-depth predictor conditions on before any backbone layer
+        runs.  Host numpy out; one jitted launch per prompt length."""
+        toks = jnp.asarray(np.asarray(prompt_tokens))
+        key = ("lm-prompt-alpha", toks.shape[1])
+        if key not in self._steps:
+            cfg = self.cfg
+
+            def step(params, t):
+                self._count_trace(key)
+                x = L.embed(params["embed"], t).astype(cfg.compute_dtype)
+                return DIFF.token_difficulty(x)
+
+            self._steps[key] = jax.jit(step)
+        return np.asarray(self._steps[key](self.params, toks))
+
     def bucket_key(self, n: int) -> int:
         """THE compile-cache key for an ``n``-row decode bucket: the
         ``BatchCompactor`` bucket rounded up to a replica multiple —
@@ -280,6 +324,7 @@ class LMDecodeEngine:
 
     def restore_state(self, path: str, step: int | None = None):
         self.state, step = ST.restore_with_migration(path, self.state, step)
+        self._policy_mirror = None
         if self.mesh is not None:
             self._commit()
         return step
@@ -317,6 +362,19 @@ class LMDecodeEngine:
                 lat_ptr=jax.device_put(s.lat_ptr, self._repl),
                 lat_count=jax.device_put(s.lat_count, self._repl),
                 deadline_miss=jax.device_put(s.deadline_miss, self._repl))
+
+    def record_quotes(self, quotes_ms, realized_ms) -> None:
+        """Fold admission-time SLO quote error telemetry (quote vs
+        realized latency; host-side write, like record_requests)."""
+        self.state = ST.record_quotes(self.state, quotes_ms, realized_ms)
+        if self.mesh is not None:
+            s = self.state
+            self.state = dataclasses.replace(
+                s, quote_ms_sum=jax.device_put(s.quote_ms_sum,
+                                               self._repl),
+                quote_err_ms_sum=jax.device_put(s.quote_err_ms_sum,
+                                                self._repl),
+                quote_count=jax.device_put(s.quote_count, self._repl))
 
     def _count_trace(self, key):
         # Runs in the Python body of a step function, i.e. once per trace.
@@ -535,6 +593,39 @@ class LMDecodeEngine:
             out_shardings=(self._state_sh, self._row))
         return self._steps[key]
 
+    def _stage_fwd_step(self, s: int, sp: int, bp: int, max_len: int):
+        """Forward-only twin of :meth:`_stage_step` for gates the
+        predictor ruled out (``min_exit`` head-skip): cache-row gather,
+        stage forward, cache + hidden scatter — NO exit head, NO Alg. 1
+        gate, NO propagation, NO telemetry fold and NO host fire sync.
+        Sound only when the gate provably can't fire (every row
+        survives), so decisions stay bit-identical to the oracle."""
+        key = ("lm-stage-fwd", s, sp, bp, max_len)
+        if key in self._steps:
+            return self._steps[key]
+        a, bnd = self.stages[s]
+        cfg = self.cfg
+
+        def step(params, cache, x_full, idx, cache_index):
+            self._count_trace(key)
+            x = jnp.take(x_full, idx, axis=0, mode="clip")
+            cache_sl = [jax.tree.map(
+                lambda c: jnp.take(c, idx, axis=0, mode="clip"), cache[i])
+                for i in range(a, bnd)]
+            x_new, new_sl = _stage_apply(params, x, cache_sl, cache_index,
+                                         cfg=cfg, a=a, b=bnd)
+            cache = list(cache)
+            for j, i in enumerate(range(a, bnd)):
+                cache[i] = jax.tree.map(
+                    lambda full, sl: full.at[idx].set(sl, mode="drop"),
+                    cache[i], new_sl[j])
+            x_full = x_full.at[idx].set(x_new, mode="drop")
+            return cache, x_full
+
+        self._steps[key] = jax.jit(step, donate_argnums=(1, 2),
+                                   out_shardings=self._row)
+        return self._steps[key]
+
     def _head_traced(self, params, h, exit_name: str, eff):
         """The decode-time exit decision for one stage: rmsnorm → unembed
         matmul → softmax confidence → Eq. 19 gate, as ONE
@@ -609,7 +700,8 @@ class LMDecodeEngine:
     # generation
     # ------------------------------------------------------------------
     def generate(self, prompt_tokens: np.ndarray, n_new: int,
-                 max_len: int | None = None, mode: str | None = None):
+                 max_len: int | None = None, mode: str | None = None,
+                 min_exit: int = 0):
         """prompt_tokens: (B, S0).  Greedy generation with early exits.
         Returns (tokens (B, n_new), exit stages (B, n_new)).
 
@@ -621,7 +713,18 @@ class LMDecodeEngine:
         flushes, ONE compiled decode step for every admission
         pattern).  Batches larger than the biggest bucket are split
         into chunks (each chunk gets its own KV cache); the continuous
-        path instead streams rows through the slot pool."""
+        path instead streams rows through the slot pool.
+
+        min_exit — gates below this stage are skipped on the sharded
+        path (forward-only stage steps: no exit head, no gate launch,
+        no fire host sync).  Sound when it comes from
+        :meth:`min_exit_bound`, where the gate provably never fires —
+        tokens and stages stay bit-identical to the oracle.  The eager
+        and continuous paths always run the full oracle."""
+        if not 0 <= int(min_exit) < self.n_exits:
+            raise ValueError(f"min_exit {min_exit} out of range for "
+                             f"{self.n_exits} exits")
+        min_exit = int(min_exit)
         if mode is None:
             mode = "sharded" if self.mesh is not None else "eager"
         if mode not in ("sharded", "eager", "continuous"):
@@ -640,12 +743,13 @@ class LMDecodeEngine:
             outs, stgs = [], []
             for a, z in self.compactor.chunks(b):
                 o, st = self.generate(prompt_tokens[a:z], n_new, max_len,
-                                      mode=mode)
+                                      mode=mode, min_exit=min_exit)
                 outs.append(o)
                 stgs.append(st)
             return np.concatenate(outs), np.concatenate(stgs)
         if mode == "sharded":
-            return self._generate_sharded(prompt_tokens, n_new, max_len)
+            return self._generate_sharded(prompt_tokens, n_new, max_len,
+                                          min_exit=min_exit)
         return self._generate_eager(prompt_tokens, n_new, max_len)
 
     def _generate_eager(self, prompt_tokens, n_new, max_len=None):
@@ -666,7 +770,8 @@ class LMDecodeEngine:
             stages.append(stage.copy())
         return np.stack(out, 1), np.stack(stages, 1)
 
-    def _generate_sharded(self, prompt_tokens, n_new, max_len=None):
+    def _generate_sharded(self, prompt_tokens, n_new, max_len=None,
+                          min_exit=0):
         cfg = self.cfg
         prompts = np.asarray(prompt_tokens)
         b, s0 = prompts.shape
@@ -693,6 +798,14 @@ class LMDecodeEngine:
                 sp = self.bucket_key(n)
                 idx = np.full(sp, bp, np.int32)
                 idx[:n] = active
+                if s < min_exit and s < len(self.stages) - 1:
+                    # gate ruled out for every row: forward-only step
+                    # (no exit head, no gate, no fire host sync)
+                    cache, x_full = self._stage_fwd_step(
+                        s, sp, bp, max_len)(self.params, cache, x_full,
+                                            jnp.asarray(idx), ci)
+                    self.layers_run += (bnd - a) * n
+                    continue
                 valid = np.zeros(sp, np.float32)
                 valid[:n] = 1.0
                 self.state, (cache, x_full, toks, stg, fire) = \

@@ -173,14 +173,23 @@ class ShardedDartEngine(DartEngine):
     # ------------------------------------------------------------------
     # compiled step factories (cached per bucket)
     # ------------------------------------------------------------------
-    def _masked_step(self, bp: int, record: bool, with_alpha: bool = False):
+    def _masked_step(self, bp: int, record: bool, with_alpha: bool = False,
+                     min_exit: int = 0):
         """Full DART serving step for a (bp,)-padded batch.
 
         ``with_alpha``: the variant that takes admission-time difficulty
         as an operand instead of fusing the Eq. 8 estimator into the
         step (used by the async scheduler, which estimated difficulty
-        once at enqueue)."""
-        key = ("masked-alpha" if with_alpha else "masked", bp, record)
+        once at enqueue).
+
+        ``min_exit`` is a STATIC head-skip depth: gates s < min_exit
+        never launch inside the compiled step (the predictor ruled them
+        out — under the conservative bound they provably never fire, so
+        the program is decision-identical to the min_exit=0 one)."""
+        key = ("masked-alpha" if with_alpha else "masked", bp, record) \
+            if not min_exit else \
+            ("masked-alpha-skip" if with_alpha else "masked-skip",
+             bp, record, min_exit)
         if key in self._steps:
             return self._steps[key]
         cum = jnp.asarray(self.cum_costs, jnp.float32)
@@ -192,7 +201,8 @@ class ShardedDartEngine(DartEngine):
                 else self._diff_fn(x, self.dcfg, **self.kernel_kw)
             eff = TH.adapt_thresholds(state.tau, self._coef_traced(state),
                                       alpha, state.beta_diff)
-            exit_idx, conf, pred = self._route_traced(logits, eff)
+            exit_idx, conf, pred = self._route_traced(logits, eff,
+                                                      min_exit=min_exit)
             macs = cum[exit_idx]
             if record:
                 state = self._fold_traced(state, exit_idx, pred, conf,
@@ -208,7 +218,7 @@ class ShardedDartEngine(DartEngine):
     def _forward_traced(self, params, x):
         return self.family.forward(params, x, self.cfg)["exit_logits"]
 
-    def _route_traced(self, logits, eff):
+    def _route_traced(self, logits, eff, min_exit: int = 0):
         """Alg. 1 over stacked exit logits (E, bp, C) with (bp, E-1)
         effective thresholds -> (exit_idx, conf, pred).
 
@@ -216,9 +226,14 @@ class ShardedDartEngine(DartEngine):
         fused gate launch through ``kernels.dispatch`` (confidence +
         argmax + Eq. 19 compare in a single VMEM pass per row on pallas
         backends; the bit-identical jnp chain on xla).  Other
-        functionals keep the generic conf-stack path."""
+        functionals keep the generic conf-stack path.
+
+        Gates i < ``min_exit`` are skipped (no gate launch; they can
+        never win the argmax)."""
         e, bp = logits.shape[0], logits.shape[1]
         if self.confidence != "softmax-max":
+            if min_exit:        # unreachable threshold, fires stay False
+                eff = eff.at[:, :min_exit].set(jnp.inf)
             conf_stack = self._conf_fn(logits)
             exit_idx, conf = TH.select_exit(conf_stack, eff)
             preds_all = jnp.argmax(logits, axis=-1)
@@ -228,6 +243,13 @@ class ShardedDartEngine(DartEngine):
         from repro.kernels import dispatch as KD
         confs, preds, fires = [], [], []
         for i in range(e):
+            if i < min_exit and i < e - 1:
+                # ruled-out gate: no fused launch, placeholder lanes
+                # (argmax can never select an all-False column)
+                confs.append(jnp.zeros((bp,), jnp.float32))
+                preds.append(jnp.zeros((bp,), jnp.int32))
+                fires.append(jnp.zeros((bp,), bool))
+                continue
             th_i = eff[:, i] if i < e - 1 \
                 else jnp.full((bp,), -1.0, jnp.float32)
             c, _, p, f = KD.exit_gate(logits[i], th_i, **self.kernel_kw)
@@ -269,6 +291,22 @@ class ShardedDartEngine(DartEngine):
         self._steps[key] = jax.jit(step, out_shardings=self._row)
         return self._steps[key]
 
+    def _stage_fwd_step(self, s: int, bp: int):
+        """Forward-only stage for bucket ``bp`` — the head-skip variant
+        of ``_stage_step`` for gates the predictor ruled out: no exit
+        head, no gate launch, and (host-side) no fire/conf sync, since
+        by the conservative bound every row survives."""
+        key = ("stage-fwd", s, bp)
+        if key in self._steps:
+            return self._steps[key]
+
+        def step(params, h):
+            self._count_trace(key)
+            return self.family.apply_stage(params, h, s, self.cfg)
+
+        self._steps[key] = jax.jit(step, out_shardings=self._row)
+        return self._steps[key]
+
     def _fold_step(self, bp: int):
         """Compiled telemetry fold for the compacted path."""
         key = ("fold", bp)
@@ -288,7 +326,8 @@ class ShardedDartEngine(DartEngine):
     # inference
     # ------------------------------------------------------------------
     def infer(self, x, mode: str = "masked", record: bool | None = None,
-              alpha=None, pad_to: int | None = None) -> dict:
+              alpha=None, pad_to: int | None = None,
+              min_exit: int = 0) -> dict:
         """Serve one request batch through the compiled path.
 
         mode="masked"    — one jitted step (serving hot path).
@@ -301,7 +340,16 @@ class ShardedDartEngine(DartEngine):
         alpha  — optional (B,) admission-time difficulty (see
                  ``DartEngine.infer``).
         pad_to — accepted for API parity and ignored: every compiled
-                 path already pads to ``bucket_key(B)`` internally."""
+                 path already pads to ``bucket_key(B)`` internally.
+        min_exit — STATIC head-skip depth (see ``DartEngine.infer``):
+                 compiled steps for gates s < min_exit skip the exit
+                 head + fused gate launches; with the conservative
+                 bound decisions are unchanged.  The eager oracle
+                 ignores it."""
+        if not 0 <= int(min_exit) < self.n_exits:
+            raise ValueError(f"min_exit {min_exit} out of range for "
+                             f"{self.n_exits} exits")
+        min_exit = int(min_exit)
         if mode == "eager":
             return super()._infer_masked(np.asarray(x), record=False,
                                          alpha=alpha)
@@ -314,13 +362,15 @@ class ShardedDartEngine(DartEngine):
         if b > self.compactor.max_bucket:
             parts = [self._infer_chunk(
                 x[a:z], mode, record,
-                alpha=None if alpha is None else alpha[a:z])
+                alpha=None if alpha is None else alpha[a:z],
+                min_exit=min_exit)
                 for a, z in self.compactor.chunks(b)]
             out = {k: np.concatenate([p[k] for p in parts])
                    for k in ("pred", "conf", "exit_idx", "alpha", "macs")}
             out["latency_s"] = sum(p["latency_s"] for p in parts)
         else:
-            out = self._infer_chunk(x, mode, record, alpha=alpha)
+            out = self._infer_chunk(x, mode, record, alpha=alpha,
+                                    min_exit=min_exit)
         if record:
             self._maybe_update()
         return out
@@ -332,13 +382,15 @@ class ShardedDartEngine(DartEngine):
         return (jax.device_put(jnp.asarray(pad), self._row),
                 jax.device_put(jnp.asarray(valid), self._row))
 
-    def _infer_chunk(self, x, mode, record, alpha=None) -> dict:
+    def _infer_chunk(self, x, mode, record, alpha=None,
+                     min_exit: int = 0) -> dict:
         t0 = time.time()
         b = x.shape[0]
         bp = self.bucket_key(b)
         if mode == "masked":
             xp, valid = self._pad_batch(x, bp)
-            step = self._masked_step(bp, record, alpha is not None)
+            step = self._masked_step(bp, record, alpha is not None,
+                                     min_exit=min_exit)
             if alpha is None:
                 self.state, out = step(self.params, self.state, xp, valid)
             else:
@@ -352,14 +404,16 @@ class ShardedDartEngine(DartEngine):
             # value materializes it.
             res = {k: v[:b] for k, v in out.items()}
         else:
-            res = self._compacted_chunk(x, bp, record, alpha=alpha)
+            res = self._compacted_chunk(x, bp, record, alpha=alpha,
+                                        min_exit=min_exit)
         if record:
             self._pending += b
         res["latency_s"] = time.time() - t0
         self.total_latency_s += res["latency_s"]
         return res
 
-    def _compacted_chunk(self, x, bp, record, alpha=None) -> dict:
+    def _compacted_chunk(self, x, bp, record, alpha=None,
+                         min_exit: int = 0) -> dict:
         if not self.family.staged:
             raise ValueError(
                 f"compacted mode needs a staged family; "
@@ -384,6 +438,16 @@ class ShardedDartEngine(DartEngine):
         for s in range(self.n_exits):
             n = len(active)
             sp = self.bucket_key(n)
+            if s < min_exit and s < self.n_exits - 1:
+                # ruled-out gate: forward-only compiled stage — no exit
+                # head, no gate launch, no fire/conf host sync, no
+                # compaction (every row provably survives)
+                h_pad = jax.device_put(
+                    self.compactor.pad(jnp.asarray(h_active), sp),
+                    self._row)
+                h_active = self._stage_fwd_step(s, sp)(
+                    self.params, h_pad)[:n]
+                continue
             if s < self.n_exits - 1:
                 eff = np.asarray(TH.stage_threshold(
                     tau[s], coef[s], alpha_active, beta_diff))
@@ -448,6 +512,7 @@ class ShardedDartEngine(DartEngine):
             s, adaptive={**new_shared, **bufs},
             since_update=jnp.zeros_like(s.since_update))
         self._pending = 0
+        self._policy_mirror = None
         self._commit()
 
     def calibrate(self, data, **kw):
@@ -465,6 +530,15 @@ class ShardedDartEngine(DartEngine):
             lat_ptr=jax.device_put(s.lat_ptr, self._repl),
             lat_count=jax.device_put(s.lat_count, self._repl),
             deadline_miss=jax.device_put(s.deadline_miss, self._repl))
+
+    def record_quotes(self, quotes_ms, realized_ms) -> None:
+        super().record_quotes(quotes_ms, realized_ms)
+        s = self.state
+        self.state = dataclasses.replace(
+            s, quote_ms_sum=jax.device_put(s.quote_ms_sum, self._repl),
+            quote_err_ms_sum=jax.device_put(s.quote_err_ms_sum,
+                                            self._repl),
+            quote_count=jax.device_put(s.quote_count, self._repl))
 
     def restore_state(self, path: str, step: int | None = None):
         step = super().restore_state(path, step)

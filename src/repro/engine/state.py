@@ -25,20 +25,22 @@ from repro.core.routing import DartParams
 _FIELDS = ("tau", "coef", "beta_diff", "beta_opt", "adaptive",
            "served", "exit_counts", "total_macs", "since_update",
            "lat_ms", "lat_ptr", "lat_count", "deadline_miss",
-           "slot_steps", "decode_steps", "pages_peak")
+           "slot_steps", "decode_steps", "pages_peak",
+           "quote_ms_sum", "quote_err_ms_sum", "quote_count")
 
 #: The pre-latency-telemetry field set.  New telemetry leaves are only
 #: ever APPENDED to ``_FIELDS``, so every older checkpoint is a strict
 #: prefix of the current flatten order — ``restore_with_migration``
 #: walks ``_LAYOUT_PREFIXES`` newest-first (restored prefix fields +
 #: fresh values for the rest).
-LEGACY_FIELDS = _FIELDS[:-7]
+LEGACY_FIELDS = _FIELDS[:-10]
 
-#: Known historical flatten orders, newest first: the latency-telemetry
-#: era (PRs 4-6, before the continuous-batching slot/page counters) and
+#: Known historical flatten orders, newest first: the continuous-
+#: batching era (PRs 7-8, before the admission-quote counters), the
+#: latency-telemetry era (PRs 4-6, before the slot/page counters) and
 #: the pre-latency era.  Trying the longer prefix first is what keeps a
 #: latency-era checkpoint from silently dropping its latency window.
-_LAYOUT_PREFIXES = (_FIELDS[:-3], LEGACY_FIELDS)
+_LAYOUT_PREFIXES = (_FIELDS[:-3], _FIELDS[:-6], LEGACY_FIELDS)
 
 #: Default size of the per-request latency ring buffer (requests, not
 #: samples — sized for percentile stability, not history).
@@ -70,6 +72,11 @@ class EngineState:
                   launches
     pages_peak:   () int32 — continuous batching: peak KV pages in use
                   (host-written at admission, like the latency window)
+    quote_ms_sum: () float32 — sum of admission-time latency quotes for
+                  completed quoted requests (host-written)
+    quote_err_ms_sum: () float32 — sum of |quote - realized latency|
+                  over the same requests (the SLO quote error)
+    quote_count:  () int32 — completed requests that carried a quote
     """
     tau: jnp.ndarray
     coef: jnp.ndarray
@@ -87,6 +94,9 @@ class EngineState:
     slot_steps: jnp.ndarray
     decode_steps: jnp.ndarray
     pages_peak: jnp.ndarray
+    quote_ms_sum: jnp.ndarray
+    quote_err_ms_sum: jnp.ndarray
+    quote_count: jnp.ndarray
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
@@ -119,6 +129,9 @@ class EngineState:
             slot_steps=jnp.zeros((), jnp.int32),
             decode_steps=jnp.zeros((), jnp.int32),
             pages_peak=jnp.zeros((), jnp.int32),
+            quote_ms_sum=jnp.zeros((), jnp.float32),
+            quote_err_ms_sum=jnp.zeros((), jnp.float32),
+            quote_count=jnp.zeros((), jnp.int32),
         )
 
     # -- views ----------------------------------------------------------
@@ -182,6 +195,28 @@ def record_requests(state: EngineState, latencies_ms,
         deadline_miss=state.deadline_miss + jnp.asarray(n_miss, jnp.int32))
 
 
+def record_quotes(state: EngineState, quotes_ms,
+                  realized_ms) -> EngineState:
+    """Fold admission-time latency quotes vs realized latency for a
+    batch of completed requests (host-side, like the latency window).
+    Entries with a None/NaN quote (admitted before the service EMA
+    seeded) are skipped."""
+    q = np.asarray([np.nan if v is None else v for v in quotes_ms],
+                   np.float32)
+    r = np.asarray(realized_ms, np.float32)
+    ok = ~np.isnan(q)
+    k = int(ok.sum())
+    if k == 0:
+        return state
+    return dataclasses.replace(
+        state,
+        quote_ms_sum=state.quote_ms_sum
+        + jnp.asarray(float(q[ok].sum()), jnp.float32),
+        quote_err_ms_sum=state.quote_err_ms_sum
+        + jnp.asarray(float(np.abs(q[ok] - r[ok]).sum()), jnp.float32),
+        quote_count=state.quote_count + jnp.asarray(k, jnp.int32))
+
+
 def latency_percentiles(lat_ms) -> dict:
     """p50/p95/p99/mean summary of a latency sample (ms).  The one
     implementation behind every ``stats()["requests"]["latency_ms"]``
@@ -201,6 +236,12 @@ def request_stats(state: EngineState) -> dict:
     if n:
         out["latency_ms"] = latency_percentiles(
             np.asarray(state.lat_ms)[:min(n, state.lat_ms.shape[0])])
+    qn = int(state.quote_count)
+    if qn:
+        out["quote"] = {
+            "quoted": qn,
+            "mean_quote_ms": float(state.quote_ms_sum) / qn,
+            "mean_abs_err_ms": float(state.quote_err_ms_sum) / qn}
     return out
 
 
@@ -264,9 +305,11 @@ def state_shardings(state: EngineState, repl, row) -> EngineState:
         served=row, exit_counts=row, total_macs=row, since_update=row,
         slot_steps=row, decode_steps=row,
         # host-written telemetry: one global value per engine (no
-        # replica axis) — the latency window and the page high-watermark
+        # replica axis) — the latency window, the page high-watermark
+        # and the admission-quote error counters
         lat_ms=repl, lat_ptr=repl, lat_count=repl, deadline_miss=repl,
-        pages_peak=repl)
+        pages_peak=repl,
+        quote_ms_sum=repl, quote_err_ms_sum=repl, quote_count=repl)
 
 
 def restore_with_migration(path: str, template: EngineState,

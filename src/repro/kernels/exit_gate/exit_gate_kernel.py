@@ -26,7 +26,6 @@ compiled kernel on TPU and the interpreter when explicitly forced.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

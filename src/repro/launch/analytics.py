@@ -19,7 +19,6 @@ with ACT = L·B_loc·S_loc·D·2 and c_act = 12 (norm/attn/mlp intermediates,
 """
 from __future__ import annotations
 
-import math
 
 from repro.configs import registry
 from repro.models import family_of

@@ -11,8 +11,7 @@ training; DART routing included for serving) — not stripped-down facsimiles.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

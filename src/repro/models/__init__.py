@@ -77,3 +77,10 @@ def family_of(cfg) -> str:
 
 def get_family(cfg) -> _Family:
     return FAMILIES[family_of(cfg)]
+
+
+__all__ = ["layers", "batchnorm", "moe", "transformer_lm", "vit", "dit",
+           "convnext", "resnet", "cnn_zoo", "LMConfig", "ViTConfig",
+           "DiTConfig", "ConvNeXtConfig", "ResNetConfig", "AlexNetConfig",
+           "VGGConfig", "LeViTConfig", "FAMILIES", "family_of",
+           "get_family"]

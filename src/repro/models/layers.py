@@ -8,7 +8,6 @@ Param leaves replaced by arrays — see ``sharding.unzip``).
 from __future__ import annotations
 
 import math
-from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp

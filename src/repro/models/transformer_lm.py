@@ -17,8 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -573,7 +572,6 @@ def lm_decode_step(params, token_ids, cache, cache_index, cfg: LMConfig, *,
     roofline); Alg. 1 gating is applied on the stacked exit logits by
     ``repro.core.routing.select_exit``.
     """
-    b = token_ids.shape[0]
     max_len = (cache[0]["c_kv"].shape[1] if cfg.attn_kind == "mla"
                else cache[0]["k"].shape[1])
     cos, sin = L.rope_freqs(

@@ -278,6 +278,35 @@ def _collect_scheduler(reg, sched, name: str) -> None:
                 if d is not None:
                     gd.set(d, member="0", dclass=str(c))
 
+    # exit-depth predictor (ISSUE 9): hit/miss + head-skip counters
+    predictor = getattr(sched, "predictor", None)
+    if predictor is not None:
+        ps = predictor.stats()
+        pe = reg.counter("dart_predictor_events_total",
+                         "exit-depth predictor counters by event",
+                         ("event",))
+        for k in ("hits", "misses", "skip_calls", "skip_stages",
+                  "observed"):
+            pe.set_total(ps[k], event=k)
+        if ps["hit_rate"] is not None:
+            reg.gauge("dart_predictor_hit_rate",
+                      "fraction of requests whose predicted depth band "
+                      "matched the realized exit").set(ps["hit_rate"])
+        # admission-quote error (quote vs realized latency), from the
+        # EngineState quote counters
+        est = getattr(sched, "engine", None)
+        if est is not None:
+            qs = est.state
+            qn = int(np.asarray(qs.quote_count))
+            if qn:
+                reg.gauge("dart_quote_mean_abs_err_ms",
+                          "mean |admission quote - realized latency|"
+                          ).set(float(np.asarray(qs.quote_err_ms_sum))
+                                / qn)
+                reg.gauge("dart_quote_mean_ms",
+                          "mean admission-time latency quote").set(
+                    float(np.asarray(qs.quote_ms_sum)) / qn)
+
     # engine telemetry (after the reduce_telemetry fold inside stats())
     engine = getattr(sched, "engine", None)
     if engine is None:

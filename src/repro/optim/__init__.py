@@ -3,3 +3,8 @@ from repro.optim.optimizers import (adamw, sgd, OptimizerState, Optimizer,
                                     trainable_mask, apply_mask)
 from repro.optim.schedules import warmup_cosine, constant, linear_decay
 from repro.optim.accumulate import GradAccumulator
+
+__all__ = ["adamw", "sgd", "OptimizerState", "Optimizer",
+           "clip_by_global_norm", "global_norm", "trainable_mask",
+           "apply_mask", "warmup_cosine", "constant", "linear_decay",
+           "GradAccumulator"]

@@ -16,11 +16,9 @@ shard_map when a "pod" axis exists, and degrades to identity otherwise.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 
 def quantize_int8(x):

@@ -28,7 +28,6 @@ import threading
 import time
 from typing import Callable
 
-import jax
 import numpy as np
 
 from repro.runtime.trainer import Trainer, TrainConfig

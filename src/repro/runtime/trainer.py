@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -196,10 +194,6 @@ class Trainer:
 
     def restore(self, path=None):
         mgr = self.manager if path is None else ckpt_lib.CheckpointManager(path)
-        shardings = None
-        if self.param_shardings is not None:
-            shardings = {"params": self.param_shardings,
-                         "opt": None, "step": None}
         got = mgr.restore_or_none(self.state_tree())
         if got is None:
             return False

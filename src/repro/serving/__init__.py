@@ -23,7 +23,14 @@ Pieces:
 * :class:`SchedulerConfig` — its knobs (flush/hold timing, backpressure
   policy ``shed`` | ``reject`` | ``degrade-alpha``, bucket targets).
 * :class:`AdmissionPlanner` — Eq. 8 difficulty + telemetry-prior cost
-  prediction at enqueue (planner.py).
+  prediction at enqueue (planner.py); with prediction on it also
+  issues per-request latency QUOTES (predicted depth × per-stage
+  service EMA).
+* :class:`ExitDepthPredictor` — admission-time exit-depth prediction
+  (predict.py): per-class online logistic heads over Eq. 8 difficulty
+  feeding head-skip (``min_exit``), predicted-depth lanes and SLO
+  quotes.  Enable via ``SchedulerConfig(predict="conservative")``
+  (bit-identical) or ``"aggressive"`` (opt-in, measured).
 * :class:`RequestQueue` — lane-keyed backpressure queue (queue.py).
 * :class:`LMDecodeSession` — the same scheduling over
   ``LMDecodeEngine.generate`` (lm_session.py); reach it via
@@ -44,9 +51,10 @@ member's lanes) — see docs/serving.md's cascade section.
 from repro.serving.loop import AsyncDartServer, SchedulerConfig
 from repro.serving.lm_session import LMDecodeSession
 from repro.serving.planner import AdmissionPlanner
+from repro.serving.predict import ExitDepthPredictor
 from repro.serving.queue import RequestQueue
 from repro.serving.request import (Request, RequestRejected, RequestShed)
 
 __all__ = ["AsyncDartServer", "SchedulerConfig", "AdmissionPlanner",
-           "RequestQueue", "LMDecodeSession", "Request",
-           "RequestRejected", "RequestShed"]
+           "ExitDepthPredictor", "RequestQueue", "LMDecodeSession",
+           "Request", "RequestRejected", "RequestShed"]

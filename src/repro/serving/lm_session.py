@@ -34,6 +34,7 @@ import numpy as np
 from repro.obs import OBS
 from repro.obs import adapters as OBS_A
 from repro.serving.loop import SchedulerConfig, _BucketScheduler
+from repro.serving.predict import ExitDepthPredictor
 from repro.serving.request import Request, RequestRejected
 
 
@@ -42,6 +43,9 @@ class LMDecodeSession(_BucketScheduler):
         self.engine = engine
         cfg = cfg or SchedulerConfig(max_batch=engine.compactor.max_bucket,
                                      policy="reject")
+        self.predictor = None if cfg.predict == "off" else \
+            ExitDepthPredictor(engine.n_exits, edges=cfg.edges,
+                               mode=cfg.predict)
         super().__init__(cfg, **kw)
 
     # -- hooks ----------------------------------------------------------
@@ -60,20 +64,36 @@ class LMDecodeSession(_BucketScheduler):
         x = np.asarray(prompt_tokens)
         if x.ndim == 1:
             x = x[None]
+        alpha = np.zeros(x.shape[0], np.float32)
+        lane = (x.shape[1], int(n_new))
+        payload = {"n_new": int(n_new)}
+        if self.predictor is not None:
+            # admission-time Eq. 8 difficulty of the prompt — the
+            # pre-backbone signal the depth predictor conditions on
+            alpha = self.engine.prompt_alpha(x).astype(np.float32)
+            band = self.predictor.depth_band(float(np.mean(alpha)))
+            lane = lane + (band,)    # predicted-depth lane component
+            payload["band"] = band
         return Request(
             rid=next(self._rid), x=x, n=x.shape[0],
-            alpha=np.zeros(x.shape[0], np.float32),
-            lane=(x.shape[1], int(n_new)), predicted_cost=float(n_new),
+            alpha=alpha,
+            lane=lane, predicted_cost=float(n_new),
             priority=priority, t_submit=now,
             deadline_s=None if deadline_ms is None
             else now + deadline_ms / 1e3,
-            future=Future(), payload={"n_new": int(n_new)})
+            future=Future(), payload=payload)
 
     def _dispatch(self, reqs: list, reason: str) -> None:
         n_new = reqs[0].payload["n_new"]
         prompts = np.concatenate([r.x for r in reqs])
         t0 = self._clock()
-        tokens, stages = self.engine.generate(prompts, n_new)
+        min_exit = 0
+        if self.predictor is not None:
+            # the decode-time routing alpha is the Eq. 8 EMA with
+            # infimum 0.0 — the sound global head-skip bound
+            min_exit = self.predictor.min_exit(self.engine, 0.0)
+        tokens, stages = self.engine.generate(prompts, n_new,
+                                              min_exit=min_exit)
         now = self._clock()
         ends = np.cumsum([r.n for r in reqs])
         lats, missed, slices = [], [], []
@@ -87,6 +107,11 @@ class LMDecodeSession(_BucketScheduler):
         # ONE store behind both session.stats() and engine.stats()
         # (and it checkpoints with the engine)
         self.engine.record_requests(lats, missed)
+        if self.predictor is not None:
+            # realized depth per row = mean decode exit stage
+            self.predictor.observe(
+                np.concatenate([r.alpha for r in reqs]),
+                np.rint(np.asarray(stages).mean(axis=1)))
         if OBS.enabled:
             OBS_A.record_lm_bucket(self, reqs, slices, t0, now)
         for r, a, z in zip(reqs, np.concatenate([[0], ends[:-1]]), ends):
@@ -101,13 +126,16 @@ class LMDecodeSession(_BucketScheduler):
     # -- metering -------------------------------------------------------
     def stats(self) -> dict:
         from repro.engine.state import request_stats
-        return {"scheduler": {**self.counters, "shed": self.queue.shed,
-                              "rejected": self.queue.rejected,
-                              "starved": self.queue.starved},
-                "requests": request_stats(self.engine.state),
-                "exit_hist": np.asarray(self.engine.stats_exit).tolist(),
-                "layers_run": self.engine.layers_run,
-                "layers_skipped": self.engine.layers_skipped}
+        out = {"scheduler": {**self.counters, "shed": self.queue.shed,
+                             "rejected": self.queue.rejected,
+                             "starved": self.queue.starved},
+               "requests": request_stats(self.engine.state),
+               "exit_hist": np.asarray(self.engine.stats_exit).tolist(),
+               "layers_run": self.engine.layers_run,
+               "layers_skipped": self.engine.layers_skipped}
+        if self.predictor is not None:
+            out["scheduler"]["predictor"] = self.predictor.stats()
+        return out
 
 
 class LMContinuousSession(LMDecodeSession):
@@ -175,7 +203,7 @@ class LMContinuousSession(LMDecodeSession):
         while True:
             req = self.queue.pop_next(
                 self._fits, reserve_after_s=self.cfg.starve_ms / 1e3,
-                now=now)
+                now=now, prefer=self._refill_prefer())
             if req is None:
                 break
             self.decoder.admit(req.x, req.payload["n_new"], tag=req.rid)
@@ -197,6 +225,11 @@ class LMContinuousSession(LMDecodeSession):
             if done:
                 self.engine.record_requests(
                     [d[3] for d in done], [d[4] for d in done])
+                if self.predictor is not None:
+                    for req, toks, stgs, _, _ in done:
+                        self.predictor.observe(
+                            req.alpha,
+                            np.rint(np.asarray(stgs).mean(axis=1)))
             for req, toks, stgs, lat_ms, miss in done:
                 if OBS.enabled:
                     OBS_A.record_slot_exit(self, req, stgs, lat_ms, miss,
@@ -207,6 +240,18 @@ class LMContinuousSession(LMDecodeSession):
                 self.counters["completed"] += 1
             did = True
         return did
+
+    def _refill_prefer(self):
+        """Depth-aware refill score (``pop_next``'s ``prefer`` hook):
+        among equally urgent fitting heads, favour the request whose
+        predicted exit depth matches the pool's current mix, so the
+        slots step in lock-step and free together.  None (urgency-only)
+        when prediction is off or the pool is empty."""
+        if self.predictor is None or not self._pending:
+            return None
+        mix = float(np.mean([q.payload.get("band", 0)
+                             for q in self._pending.values()]))
+        return lambda r: -abs(r.payload.get("band", 0) - mix)
 
     def _wait_timeout(self, now: float) -> float | None:
         if self.decoder.active_rows:

@@ -50,6 +50,7 @@ from repro.obs import OBS
 from repro.obs import adapters as OBS_A
 from repro.obs import log as OBS_LOG
 from repro.serving.planner import AdmissionPlanner
+from repro.serving.predict import ExitDepthPredictor
 from repro.serving.queue import RequestQueue
 from repro.serving.request import Request, RequestRejected
 
@@ -77,6 +78,14 @@ class SchedulerConfig:
                     urgent queued request may be passed over for lack
                     of capacity before freed slots are reserved for it
                     (see ``RequestQueue.pop_next``)
+    predict:        admission-time exit-depth prediction — "off" |
+                    "conservative" (head-skip only where Eq. 19
+                    provably can't fire: bit-identical decisions) |
+                    "aggressive" (additionally skip gates the learned
+                    histogram says never fire — opt-in, measured).
+                    On, requests get predicted-depth lanes, an
+                    admission latency quote, and per-bucket head-skip
+                    (see ``repro.serving.predict``)
     """
     max_batch: int = 64
     flush_ms: float = 5.0
@@ -90,6 +99,7 @@ class SchedulerConfig:
     edges: tuple = DIFF.DEFAULT_EDGES
     sample_ndim: int = 3
     starve_ms: float = 50.0
+    predict: str = "off"
 
 
 class _BucketScheduler:
@@ -363,6 +373,10 @@ class AsyncDartServer(_BucketScheduler):
                  *, clock=time.monotonic, start: bool = True):
         self.engine = engine
         self.planner = self._make_planner(cfg)
+        self.predictor = None if cfg.predict == "off" else \
+            ExitDepthPredictor(engine.n_exits, edges=cfg.edges,
+                               mode=cfg.predict,
+                               priors=self.planner.priors)
         # Per-lane Eq. 9 telemetry: static reference = the full network
         # (for a cascade engine, the biggest member's full network).
         self.daes = DAES.LaneDaesAccumulator(
@@ -392,13 +406,39 @@ class AsyncDartServer(_BucketScheduler):
             alpha = alpha * self.cfg.degrade_factor
             lane, cost = self.planner.classify(alpha)
             self.counters["degraded"] += 1
+        payload = {}
+        if self.predictor is not None:
+            depth, band = self.predictor.admit_info(float(np.mean(alpha)))
+            quote = self._quote_ms(depth)
+            if (quote is not None and deadline_ms is not None
+                    and self.cfg.policy == "degrade-alpha"
+                    and quote > deadline_ms):
+                # the quote says this request cannot make its SLO at
+                # its predicted depth: degrade it at admission instead
+                # of letting it miss
+                alpha = alpha * self.cfg.degrade_factor
+                lane, cost = self.planner.classify(alpha)
+                self.counters["degraded"] += 1
+                depth, band = self.predictor.admit_info(
+                    float(np.mean(alpha)))
+                quote = self._quote_ms(depth)
+            # predicted-depth lane component: a flushed bucket's rows
+            # are predicted to exit together
+            lane = (lane, band)
+            payload = {"quote_ms": quote, "depth": depth}
+            if quote is not None:
+                cost = quote    # predicted_cost becomes the SLO quote
         return Request(
             rid=next(self._rid), x=x, n=x.shape[0], alpha=alpha,
             lane=lane, predicted_cost=cost, priority=priority,
             t_submit=now,
             deadline_s=None if deadline_ms is None
             else now + deadline_ms / 1e3,
-            future=Future())
+            future=Future(), payload=payload)
+
+    def _quote_ms(self, depth: float):
+        quote_fn = getattr(self.planner, "quote_ms", None)
+        return None if quote_fn is None else quote_fn(depth)
 
     def _infer_batch(self, reqs: list, x, alpha) -> dict:
         """ONE engine call for a flushed run of requests.  Masked
@@ -411,8 +451,15 @@ class AsyncDartServer(_BucketScheduler):
         pad_to = self.engine.bucket_key(x.shape[0]) \
             if self.cfg.mode == "masked" \
             and x.shape[0] <= self.engine.compactor.max_bucket else None
+        min_exit = 0
+        if self.predictor is not None:
+            # the bucket's smallest difficulty bounds every row (Eq. 19
+            # is monotone in alpha), so one min_exit covers the bucket
+            min_exit = self.predictor.min_exit(self.engine,
+                                               float(np.min(alpha)))
         return self.engine.infer(x, mode=self.cfg.mode, record=True,
-                                 alpha=alpha, pad_to=pad_to)
+                                 alpha=alpha, pad_to=pad_to,
+                                 min_exit=min_exit)
 
     def _dispatch(self, reqs: list, reason: str) -> None:
         x = np.concatenate([r.x for r in reqs])
@@ -471,6 +518,14 @@ class AsyncDartServer(_BucketScheduler):
         # stats()["requests"] (the documented pattern).
         self.engine.record_requests(lats, missed)
         self.planner.observe(vals["exit_idx"], vals["alpha"])
+        if self.predictor is not None:
+            self.predictor.observe(vals["alpha"], vals["exit_idx"])
+            self.engine.record_quotes(
+                [r.payload.get("quote_ms") for r in reqs], lats)
+            svc = getattr(self.planner, "observe_service", None)
+            if svc is not None:
+                svc((now - t_dispatch) * 1e3,
+                    float(np.mean(vals["exit_idx"])))
         for r, res in zip(reqs, results):
             self.daes.observe(r.lane, res["conf"], res["macs"],
                               res["alpha"])
@@ -494,5 +549,10 @@ class AsyncDartServer(_BucketScheduler):
             "depth_prior": self.planner.priors(),
             "service_ms_ema": self._service_s * 1e3,
         }
+        if self.predictor is not None:
+            s["scheduler"]["predictor"] = self.predictor.stats()
+            stage_fn = getattr(self.planner, "stage_ms", None)
+            if stage_fn is not None:
+                s["scheduler"]["stage_ms_ema"] = stage_fn()
         s["daes"] = self.daes.rows()
         return s

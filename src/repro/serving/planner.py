@@ -40,6 +40,7 @@ class AdmissionPlanner:
         self.n_classes = len(self.edges) + 1
         self.ema_decay = float(ema_decay)
         self._depth_ema = [None] * self.n_classes
+        self._stage_ms = None      # per-stage service-time EMA (quotes)
         self._lock = threading.Lock()
         cum = np.asarray(engine.cum_costs, np.float64)
         self._cum_norm = cum / cum[-1]
@@ -106,3 +107,35 @@ class AdmissionPlanner:
         """Current per-class expected exit depth (None = never seen)."""
         with self._lock:
             return list(self._depth_ema)
+
+    # ------------------------------------------------------------------
+    # admission-time SLO quoting (ISSUE 9): predicted depth x per-stage
+    # service EMA — a latency quote in ms, not a MACs fraction.  The
+    # pinned ``predicted_cost`` MACs prior stays intact (the cascade
+    # planner composes on it); quotes are an additional signal.
+    # ------------------------------------------------------------------
+    def observe_service(self, service_ms: float,
+                        depth_mean: float) -> None:
+        """Fold one completed bucket's realized service time into the
+        per-stage service EMA.  ``depth_mean`` is the bucket's mean
+        realized exit stage, so a bucket that exited at stage d paid
+        for d+1 stages."""
+        per = float(service_ms) / (float(depth_mean) + 1.0)
+        with self._lock:
+            self._stage_ms = per if self._stage_ms is None else \
+                self.ema_decay * self._stage_ms \
+                + (1.0 - self.ema_decay) * per
+
+    def quote_ms(self, depth: float) -> float | None:
+        """Latency quote for a request predicted to exit at (fractional)
+        stage ``depth``: (depth+1) stages x the per-stage service EMA.
+        None until a completed bucket has seeded the EMA."""
+        with self._lock:
+            if self._stage_ms is None:
+                return None
+            return (float(depth) + 1.0) * self._stage_ms
+
+    def stage_ms(self) -> float | None:
+        """The per-stage service-time EMA feeding quotes (ms)."""
+        with self._lock:
+            return self._stage_ms

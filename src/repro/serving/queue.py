@@ -128,7 +128,8 @@ class RequestQueue:
             return min(ds) if ds else None
 
     def pop_next(self, fits, *, reserve_after_s: float = 0.05,
-                 now: float | None = None) -> Request | None:
+                 now: float | None = None,
+                 prefer=None) -> Request | None:
         """Pop the most urgent lane head that ``fits`` — the continuous
         slot-refill primitive (no bucket consolidation; one request at
         a time as slots free up).
@@ -139,19 +140,41 @@ class RequestQueue:
         considering junior heads: freed capacity is reserved for the
         starved senior instead of an endless stream of smaller juniors
         backfilling around it (the anti-starvation guarantee the
-        continuous session's edge test pins)."""
+        continuous session's edge test pins).
+
+        ``prefer`` (optional, ``Request -> float``) breaks ties among
+        SAME-URGENCY fitting heads (equal priority, submit times within
+        ``reserve_after_s``): the depth-aware refill hook — the LM
+        continuous session scores candidates by how well their
+        predicted exit depth matches the slot pool's current stage mix.
+        Urgency order is never violated: a strictly more urgent fitting
+        head still wins regardless of score."""
         with self._lock:
             heads = [lane[0] for lane in self._lanes.values() if lane]
             heads.sort(key=lambda r: (-r.priority, r.t_submit, r.rid))
+            best = None
             for r in heads:
                 if fits(r):
-                    self._lanes[r.lane].popleft()
-                    return r
-                if now is not None \
+                    if prefer is None:
+                        self._lanes[r.lane].popleft()
+                        return r
+                    if best is None:
+                        best = r
+                    elif (r.priority == best.priority
+                            and r.t_submit - best.t_submit
+                            <= reserve_after_s):
+                        if prefer(r) > prefer(best):
+                            best = r
+                    else:
+                        break   # strictly less urgent: stop scanning
+                    continue
+                if best is None and now is not None \
                         and now - r.t_submit >= reserve_after_s:
                     self.starved += 1
                     return None     # hold capacity for this head
-            return None
+            if best is not None:
+                self._lanes[best.lane].popleft()
+            return best
 
     # ------------------------------------------------------------------
     # flush

@@ -1,6 +1,5 @@
 """Checkpoint substrate: roundtrip, async, atomicity, integrity, GC."""
 import os
-import shutil
 
 import jax.numpy as jnp
 import numpy as np

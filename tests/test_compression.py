@@ -12,12 +12,14 @@ except ImportError:
     # which CI sets — there the real package must be installed)
     from _hypothesis_compat import given, settings, strategies as st
 
+from _prop import examples
+
 from repro.parallel.compression import (CompressionConfig, compress_grads,
                                         init_error_feedback, quantize_int8,
                                         dequantize_int8, topk_sparsify)
 
 
-@settings(max_examples=30, deadline=None)
+@settings(max_examples=examples(30), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
 def test_int8_quantization_error_bound(seed, scale):
     x = jax.random.normal(jax.random.key(seed), (256,)) * scale

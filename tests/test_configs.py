@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: every assigned arch's REDUCED config runs
 one forward / train step on CPU with finite outputs and correct shapes.
 The FULL configs are exercised only via the dry-run (no allocation)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -32,6 +32,8 @@ except ImportError:
     # which CI sets — there the real package must be installed)
     from _hypothesis_compat import given, settings, strategies as st
 
+from _prop import examples
+
 from repro.core.routing import DartParams
 from repro.engine import LMDecodeEngine
 from repro.engine.compactor import OutOfCapacity
@@ -114,7 +116,7 @@ def _drive(dec, rs, reqs):
 # ---------------------------------------------------------------------------
 # the differential property (satellite 1)
 # ---------------------------------------------------------------------------
-@settings(max_examples=5, deadline=None)
+@settings(max_examples=examples(5), deadline=None)
 @given(seed=st.integers(0, 10_000),
        tau=st.sampled_from([0.0, 0.05, 1.0]))
 def test_random_streams_match_eager_oracle(seed, tau):

@@ -1,6 +1,5 @@
 """Data substrate: determinism, stateless resume, difficulty structure."""
 import numpy as np
-import pytest
 
 from repro.data.datasets import (DatasetConfig, make_batch, MNIST, CIFAR,
                                  synth_tokens_sample)

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -11,10 +10,12 @@ except ImportError:
     # which CI sets — there the real package must be installed)
     from _hypothesis_compat import given, settings, strategies as st
 
+from _prop import examples
+
 from repro.core import difficulty as D
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=examples(25), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1),
        h=st.integers(8, 48), w=st.integers(8, 48),
        c=st.sampled_from([1, 3]))
@@ -52,7 +53,6 @@ def test_monotone_in_noise_level():
 def test_fusion_weights_respected():
     img = jax.random.uniform(jax.random.key(2), (2, 32, 32, 3))
     comp = D.image_difficulty_components(img)
-    cfg = D.DEFAULT
     manual = np.clip(0.4 * np.asarray(comp["edge"])
                      + 0.3 * np.asarray(comp["variance"])
                      + 0.3 * np.asarray(comp["gradient"]), 0, 1)
@@ -70,7 +70,7 @@ def test_edge_density_definition():
     assert abs(e - expected) < 1e-6
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=examples(20), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_token_difficulty_bounds(seed):
     emb = jax.random.normal(jax.random.key(seed), (3, 12, 16)) * 2

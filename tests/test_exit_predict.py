@@ -1,0 +1,329 @@
+"""Admission-time exit-depth prediction (ISSUE 9).
+
+Covers, per the acceptance list:
+
+* conservative head-skip is BIT-IDENTICAL to the eager oracle — the
+  served decisions (pred / exit_idx for the classifier, tokens AND
+  exit stages for LM decode) match per-request inference with no
+  ``min_exit``, on a 1-device mesh in-process and on an 8-fake-device
+  mesh in a subprocess — while the predictor actually engages
+  (``skip_stages > 0``, otherwise the test proves nothing);
+* head-skip variants compile separately but only once:
+  ``trace_counts`` stays one per (stage, bucket) key and repeats never
+  retrace;
+* the predictor converges online on a synthetic difficulty→depth
+  stream (depth heads ordered, bands settle, band hit rate high);
+* the admission-time SLO quote error lands in ``stats()``
+  (``requests.quote``) and in the obs exposition
+  (``dart_quote_mean_abs_err_ms`` + ``dart_predictor_*``).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.core.routing import DartParams
+from repro.data.datasets import DatasetConfig, make_batch
+from repro.engine import DartEngine, LMDecodeEngine
+from repro.launch.mesh import make_serving_mesh
+from repro.models.transformer_lm import LMConfig, lm_init
+from repro.models.vit import ViTConfig, vit_init
+from repro.obs import metrics as M
+from repro.parallel.sharding import unzip
+from repro.serving import AsyncDartServer, ExitDepthPredictor, \
+    SchedulerConfig
+
+DATA = DatasetConfig(name="synth-cifar", n_train=128, n_eval=128)
+VC = ViTConfig(name="vt-pred", img_res=32, patch=8, n_layers=3,
+               d_model=32, n_heads=2, d_ff=64, n_classes=10,
+               exit_layers=(0, 1))
+# tau[0]=0.9 with beta_diff=0.3: Eq. 19 unclipped threshold exceeds
+# the softmax-max confidence bound (1.0) whenever alpha >= 1/3 — true
+# for every synth-cifar eval image — so the conservative bound rules
+# gate 0 out and min_exit=1 engages on every served bucket.
+TAU = (0.9, 0.2)
+
+LM_CFG = LMConfig(name="lm-pred-t", n_layers=4, d_model=32, n_heads=2,
+                  n_kv_heads=1, d_ff=64, vocab=32, exit_layers=(0, 2),
+                  max_seq=64, remat=False)
+# the LM session's decode-time alpha infimum is 0.0, so ruling gate 0
+# out needs coef[0]*tau[0] >= 1.0 on its own
+LM_COEF = (1.2, 1.0)
+LM_TAU = (0.9, 0.1)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs.reset()
+    yield
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def vit_params():
+    return unzip(vit_init(jax.random.key(0), VC))[0]
+
+
+@pytest.fixture(scope="module")
+def images():
+    x, _ = make_batch(DATA, range(64), split="eval")
+    return np.asarray(x)
+
+
+def make_engine(params, **kw):
+    kw.setdefault("cum_costs", [0.4, 0.7, 1.0])
+    kw.setdefault("adapt", True)
+    kw.setdefault("update_every", 10 ** 9)
+    return DartEngine.from_config(
+        VC, params,
+        dart=DartParams(tau=jnp.asarray(TAU), coef=jnp.ones(2),
+                        beta_diff=0.3), **kw)
+
+
+def _lm_dart():
+    return DartParams(tau=jnp.asarray(LM_TAU), coef=jnp.asarray(LM_COEF),
+                      beta_diff=0.3)
+
+
+# ---------------------------------------------------------------------------
+# the sound bound itself
+# ---------------------------------------------------------------------------
+def test_min_exit_bound_manual(vit_params):
+    eng = make_engine(vit_params)
+    # alpha below 1/3: 0.9 + 0.3*alpha < 1.0 — nothing provably cold
+    assert eng.min_exit_bound(0.0) == 0
+    # above: gate 0 ruled out; gate 1 (tau=0.2) never is
+    assert eng.min_exit_bound(0.5) == 1
+    assert eng.min_exit_bound(1.0) == 1
+    # the final stage can never be skipped
+    assert eng.min_exit_bound(1.0) < eng.n_exits
+
+
+# ---------------------------------------------------------------------------
+# conservative server == eager oracle (classifier, 1-device mesh)
+# ---------------------------------------------------------------------------
+def test_conservative_server_bit_identical_to_oracle(vit_params, images):
+    eng = make_engine(vit_params, mesh=make_serving_mesh())
+    srv = AsyncDartServer(eng, SchedulerConfig(
+        max_batch=8, flush_ms=1.0, mode="compacted",
+        predict="conservative"))
+    reqs = [images[i:i + 4] for i in range(0, len(images), 4)]
+    futs = [srv.submit(x, deadline_ms=10_000) for x in reqs]
+    outs = [f.result(timeout=120) for f in futs]
+    srv.close()
+    # head-skip must have engaged, or this equivalence proves nothing
+    ps = srv.predictor.stats()
+    assert ps["skip_stages"] > 0, ps
+    assert ps["skip_calls"] > 0
+    # per-request oracle on the same engine, no min_exit, no recording
+    for x, out in zip(reqs, outs):
+        ref = eng.infer(x, mode="compacted", record=False)
+        np.testing.assert_array_equal(out["pred"], np.asarray(ref["pred"]))
+        np.testing.assert_array_equal(out["exit_idx"],
+                                      np.asarray(ref["exit_idx"]))
+        np.testing.assert_allclose(out["conf"], np.asarray(ref["conf"]),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(out["macs"], np.asarray(ref["macs"]),
+                                   rtol=2e-5, atol=2e-5)
+    # the stats surface carries the predictor block
+    st = srv.stats()
+    assert st["scheduler"]["predictor"]["mode"] == "conservative"
+    assert st["scheduler"]["predictor"]["observed"] > 0
+
+
+def test_skip_variants_trace_once_per_key(vit_params, images):
+    """min_exit variants are distinct compiled programs (min_exit=0
+    preserves the legacy step-cache keys) but each traces exactly once,
+    and repeats reuse."""
+    eng = make_engine(vit_params, mesh=make_serving_mesh())
+    x = images[:8]
+    base = eng.infer(x, mode="compacted", record=False)
+    n0 = dict(eng.trace_counts)
+    assert all(n == 1 for n in n0.values()), n0
+    out = eng.infer(x, mode="compacted", record=False, min_exit=1)
+    assert eng.trace_counts != n0          # new skip-variant programs
+    assert all(n == 1 for n in eng.trace_counts.values()), \
+        eng.trace_counts
+    # decisions unchanged under the sound bound
+    np.testing.assert_array_equal(out["pred"], base["pred"])
+    np.testing.assert_array_equal(out["exit_idx"], base["exit_idx"])
+    # repeats of BOTH variants never retrace
+    eng.infer(x, mode="compacted", record=False)
+    eng.infer(x, mode="compacted", record=False, min_exit=1)
+    assert all(n == 1 for n in eng.trace_counts.values()), \
+        eng.trace_counts
+    with pytest.raises(ValueError, match="min_exit"):
+        eng.infer(x, mode="compacted", min_exit=eng.n_exits)
+
+
+# ---------------------------------------------------------------------------
+# conservative LM session == eager oracle (tokens AND stages)
+# ---------------------------------------------------------------------------
+def test_lm_session_conservative_matches_oracle():
+    params = unzip(lm_init(jax.random.key(0), LM_CFG))[0]
+    eng = LMDecodeEngine(LM_CFG, params, _lm_dart())
+    assert eng.min_exit_bound(0.0) == 1    # coef[0]*tau[0] = 1.08 >= 1
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, LM_CFG.vocab, (3, 7)),
+               rng.randint(0, LM_CFG.vocab, (2, 7))]
+    session = eng.session(SchedulerConfig(
+        max_batch=8, flush_ms=1.0, policy="reject",
+        predict="conservative"))
+    futs = [session.submit(p, deadline_ms=60_000, n_new=6)
+            for p in prompts]
+    outs = [f.result(timeout=120) for f in futs]
+    session.close()
+    ps = session.predictor.stats()
+    assert ps["skip_stages"] > 0, ps
+    # oracle: a fresh identical engine, per-request, no min_exit
+    oracle = LMDecodeEngine(LM_CFG, params, _lm_dart())
+    for p, out in zip(prompts, outs):
+        tok_ref, stg_ref = oracle.generate(p, n_new=6)
+        np.testing.assert_array_equal(out["tokens"], tok_ref)
+        np.testing.assert_array_equal(out["stages"], stg_ref)
+
+
+# ---------------------------------------------------------------------------
+# predictor training dynamics
+# ---------------------------------------------------------------------------
+def test_predictor_converges_on_synthetic_stream():
+    pred = ExitDepthPredictor(3)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        a = rng.uniform(0.0, 1.0, 16)
+        e = np.where(a < 0.35, 0, np.where(a < 0.7, 1, 2))
+        pred.observe(a, e)
+    d_easy = pred.predict_depth(0.1)
+    d_mid = pred.predict_depth(0.5)
+    d_hard = pred.predict_depth(0.9)
+    assert d_easy < d_mid < d_hard
+    assert (pred.depth_band(0.1), pred.depth_band(0.5),
+            pred.depth_band(0.9)) == (0, 1, 2)
+    st = pred.stats()
+    assert st["observed"] == 640
+    assert st["hit_rate"] > 0.8, st
+    # the one-lock admission fast path agrees with the split calls
+    d, band = pred.admit_info(0.5)
+    assert band == pred.depth_band(0.5)
+    assert d == pytest.approx(pred.predict_depth(0.5))
+
+
+def test_predictor_band_is_sticky_near_boundary():
+    """A depth hovering at a rounding boundary must not flip the lane
+    band back and forth — that would split one class across two lanes
+    and fragment bucket consolidation."""
+    pred = ExitDepthPredictor(3, priors=lambda: None, band_hysteresis=0.25)
+    # train class of alpha=0.5 to depth ~1.0, then nudge: band stays
+    for _ in range(30):
+        pred.observe(np.full(8, 0.5), np.full(8, 1, np.int64))
+    band0 = pred.depth_band(0.5)
+    assert band0 == 1
+    # a handful of depth-2 observations move the head a little, but not
+    # past the hysteresis margin — the band must hold
+    pred.observe(np.full(4, 0.5), np.full(4, 2, np.int64))
+    assert pred.depth_band(0.5) == band0
+    # mode and ctor validation
+    with pytest.raises(ValueError, match="unknown mode"):
+        ExitDepthPredictor(3, mode="yolo")
+    with pytest.raises(ValueError, match="n_exits"):
+        ExitDepthPredictor(0)
+
+
+# ---------------------------------------------------------------------------
+# SLO quote error: stats() + obs exposition
+# ---------------------------------------------------------------------------
+def test_quote_error_in_stats_and_obs(vit_params, images):
+    obs.configure(enabled=True)
+    eng = make_engine(vit_params, mesh=make_serving_mesh())
+    srv = AsyncDartServer(eng, SchedulerConfig(
+        max_batch=8, flush_ms=1.0, mode="compacted",
+        predict="conservative"))
+    # wave 1 seeds the per-stage service EMA (quotes are None while the
+    # planner has no realized service times); wave 2 gets real quotes
+    for wave in range(2):
+        futs = [srv.submit(images[i:i + 4], deadline_ms=10_000)
+                for i in range(0, 32, 4)]
+        for f in futs:
+            f.result(timeout=120)
+    st = srv.stats()
+    srv.close()
+    q = st["requests"].get("quote")
+    assert q is not None, st["requests"]
+    assert q["quoted"] >= 8
+    assert q["mean_quote_ms"] > 0.0
+    assert q["mean_abs_err_ms"] >= 0.0
+    # per-stage service EMA backing the quote is surfaced too
+    assert "stage_ms_ema" in st["scheduler"]
+    # and the obs exposition carries the predictor + quote families
+    fams = M.parse_prometheus(obs.get_registry().render())
+    assert "dart_predictor_events_total" in fams
+    assert "dart_predictor_hit_rate" in fams
+    assert "dart_quote_mean_abs_err_ms" in fams
+    assert "dart_quote_mean_ms" in fams
+    events = {lbl.get("event"): v for _, lbl, v
+              in fams["dart_predictor_events_total"]["samples"]}
+    assert events["skip_stages"] > 0, events
+
+
+# ---------------------------------------------------------------------------
+# 8-fake-device mesh (subprocess)
+# ---------------------------------------------------------------------------
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.routing import DartParams
+    from repro.engine import LMDecodeEngine
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.transformer_lm import LMConfig, lm_init
+    from repro.parallel.sharding import unzip
+
+    cfg = LMConfig(name="lm-pred-8dev", n_layers=4, d_model=32,
+                   n_heads=2, n_kv_heads=1, d_ff=64, vocab=32,
+                   exit_layers=(0, 2), max_seq=64, remat=False)
+    params = unzip(lm_init(jax.random.key(0), cfg))[0]
+    dart = DartParams(tau=jnp.asarray((0.9, 0.1)),
+                      coef=jnp.asarray((1.2, 1.0)), beta_diff=0.3)
+    prompts = np.random.RandomState(0).randint(0, cfg.vocab, (5, 7))
+
+    sh = LMDecodeEngine(cfg, params, dart, mesh=make_serving_mesh())
+    assert sh.n_replicas == 8, sh.n_replicas
+    m = sh.min_exit_bound(0.0)
+    assert m == 1, m
+
+    # head-skip on the fused sharded decode == the eager oracle, on
+    # tokens AND exit stages
+    oracle = LMDecodeEngine(cfg, params, dart)
+    tok_ref, stg_ref = oracle.generate(prompts, n_new=8)
+    tok_s, stg_s = sh.generate(prompts, n_new=8, min_exit=m)
+    np.testing.assert_array_equal(tok_s, tok_ref)
+    np.testing.assert_array_equal(stg_s, stg_ref)
+
+    # skip variants trace once per (stage, bucket) key, repeats reuse
+    before = dict(sh.trace_counts)
+    assert all(n == 1 for n in before.values()), before
+    sh.generate(prompts, n_new=8, min_exit=m)
+    assert sh.trace_counts == before, sh.trace_counts
+    # the unskipped variant compiles separately — and only once
+    sh.generate(prompts, n_new=8)
+    assert len(sh.trace_counts) > len(before)
+    assert all(n == 1 for n in sh.trace_counts.values()), sh.trace_counts
+    print("EXIT_PREDICT_8DEV_OK")
+""" % os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_head_skip_equivalence_on_8_devices():
+    """Conservative head-skip == eager oracle with 8 fake devices
+    (subprocess; the in-process suite is pinned to one device)."""
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "EXIT_PREDICT_8DEV_OK" in r.stdout

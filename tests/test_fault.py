@@ -2,7 +2,6 @@
 import time
 
 import numpy as np
-import pytest
 
 from repro.data.datasets import DatasetConfig
 from repro.models.cnn_zoo import AlexNetConfig

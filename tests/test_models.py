@@ -72,7 +72,6 @@ def test_kv_propagation_fills_deeper_layers():
     cache, _ = lm_prefill(p, toks[:, :5], cfg, cache)
     eh, cache_full = lm_decode_step(p, toks[:, 5:6], cfg=cfg, cache=cache,
                                     cache_index=5)
-    h_exit = eh[0][:, None, :]
     cache_prop = lm_kv_propagate(p, eh[0], cfg, cache, 5, from_layer=2)
     for layer in (2, 3):
         k = cache_prop[layer]["k"][:, 5]

@@ -10,10 +10,12 @@ except ImportError:
     # which CI sets — there the real package must be installed)
     from _hypothesis_compat import given, settings, strategies as st
 
+from _prop import examples
+
 from repro.core import thresholds as TH
 
 
-@settings(max_examples=50, deadline=None)
+@settings(max_examples=examples(50), deadline=None)
 @given(seed=st.integers(0, 10_000), e=st.integers(2, 6),
        b=st.integers(1, 16), beta=st.floats(0.0, 1.0))
 def test_select_exit_matches_sequential_alg1(seed, e, b, beta):
@@ -39,7 +41,7 @@ def test_select_exit_matches_sequential_alg1(seed, e, b, beta):
         assert float(c[s]) == pytest.approx(conf[expected, s])
 
 
-@settings(max_examples=50, deadline=None)
+@settings(max_examples=examples(50), deadline=None)
 @given(seed=st.integers(0, 10_000), beta=st.floats(0.0, 1.0))
 def test_adapted_thresholds_clamped_and_monotone_in_alpha(seed, beta):
     rs = np.random.RandomState(seed)

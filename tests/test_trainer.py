@@ -2,7 +2,6 @@
 and compression paths train; BN stats update."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.datasets import DatasetConfig
 from repro.models.cnn_zoo import AlexNetConfig
