@@ -2,8 +2,8 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test smoke engine-test bench bench-serving bench-async bench-lm \
-    bench-cascade bench-predict bench-kernels bench-obs dartop perf-check \
-    docs-check deps
+    bench-cascade bench-predict bench-chaos bench-kernels bench-obs dartop \
+    perf-check docs-check deps
 
 # Tier-1 verify (ROADMAP): docs lint + the full test suite, fail-fast.
 test: docs-check
@@ -48,6 +48,12 @@ bench-cascade:
 # JSON to artifacts/perf/serving_predict.json).
 bench-predict:
 	$(PY) -m benchmarks.serving_predict
+
+# Fault-tolerant serving under a kill-and-rejoin chaos schedule
+# (degraded-floor + recovery ratios and fault-plan determinism; JSON to
+# artifacts/perf/serving_chaos.json).
+bench-chaos:
+	$(PY) -m benchmarks.serving_chaos
 
 # Fused-kernel microbenchmarks vs the composed XLA reference chains
 # (dispatch backends + the >=1.3x acceptance gate; JSON to

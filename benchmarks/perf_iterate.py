@@ -168,7 +168,9 @@ def smoke_cell():
             ("exit-prediction serving", "benchmarks.serving_predict",
              (), "serving_predict"),
             ("observability overhead", "benchmarks.serving_async",
-             ("--smoke",), "obs")):
+             ("--smoke",), "obs"),
+            ("chaos serving", "benchmarks.serving_chaos", (),
+             "serving_chaos")):
         print(f"===== §Perf smoke: {title} (measured) =====")
         out_json = os.path.join(OUT, f"{key}.json")
         if os.path.exists(out_json):
@@ -371,8 +373,15 @@ def serving_cell():
           "predictor-off with DAES no worse")
     r5 = subprocess.run(
         [sys.executable, "-m", "benchmarks.serving_predict"], env=env)
+    print("\n===== §Perf cell: chaos serving (measured) =====")
+    print("    hypothesis: killing one of two pool engines must not "
+          "collapse serving — retry/requeue reroutes the dead engine's "
+          "buckets while the degradation ladder forces shallower Eq. 19 "
+          "exits, and throughput returns to fault-free after the rejoin")
+    r6 = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_chaos"], env=env)
     return r1.returncode or r2.returncode or r3.returncode \
-        or r4.returncode or r5.returncode
+        or r4.returncode or r5.returncode or r6.returncode
 
 
 def main():

@@ -148,6 +148,20 @@ class CascadePlanner:
         return {"depth": [p.priors() for p in self.members],
                 "escalation": esc}
 
+    # -- snapshot (serving-state checkpoint) ----------------------------
+    def state_dict(self) -> dict:
+        with self._lock:
+            esc = [list(row) for row in self._esc_ema]
+        return {"members": [p.state_dict() for p in self.members],
+                "escalation": esc}
+
+    def load_state_dict(self, state: dict) -> None:
+        for p, s in zip(self.members, state["members"]):
+            p.load_state_dict(s)
+        with self._lock:
+            for row, saved in zip(self._esc_ema, state["escalation"]):
+                row[:] = list(saved)
+
 
 class CascadeAsyncServer(AsyncDartServer):
     """The async scheduler over a :class:`CascadeEngine` — construct it
@@ -166,9 +180,10 @@ class CascadeAsyncServer(AsyncDartServer):
         pad_to = eng.bucket_key(x.shape[0]) \
             if self.cfg.mode == "masked" \
             and x.shape[0] <= eng.compactor.max_bucket else None
-        return self.engine.infer_member(member, x, alpha=alpha,
-                                        mode=self.cfg.mode, record=True,
-                                        pad_to=pad_to)
+        return self._engine_call(
+            lambda cas: cas.infer_member(member, x, alpha=alpha,
+                                         mode=self.cfg.mode, record=True,
+                                         pad_to=pad_to))
 
     # -- completion -----------------------------------------------------
     def _root_buffer(self, root: Request) -> dict:

@@ -38,6 +38,14 @@ from repro.runtime.trainer import Trainer, TrainConfig
 # ---------------------------------------------------------------------------
 
 class HeartbeatMonitor:
+    """Deadline-based liveness with elastic membership.
+
+    ``on_failure`` callbacks fire OUTSIDE the internal lock: a callback
+    is allowed to call ``beat``/``add_worker``/``remove_worker`` (a
+    recovery path that re-registers a replacement worker does exactly
+    that) without deadlocking the watch thread.
+    """
+
     def __init__(self, workers: list[str], timeout_s: float = 1.0,
                  on_failure: Callable[[str], None] | None = None):
         self.timeout_s = timeout_s
@@ -53,15 +61,36 @@ class HeartbeatMonitor:
         with self._lock:
             self.last[worker] = time.monotonic()
 
+    def add_worker(self, worker: str):
+        """(Re-)register a worker: fresh deadline, cleared death mark."""
+        with self._lock:
+            self.last[worker] = time.monotonic()
+            self.dead.discard(worker)
+
+    def remove_worker(self, worker: str):
+        """Deregister a worker (drained/decommissioned — not a failure:
+        no callback fires and it is not marked dead)."""
+        with self._lock:
+            self.last.pop(worker, None)
+            self.dead.discard(worker)
+
+    def workers(self) -> list[str]:
+        with self._lock:
+            return list(self.last)
+
     def _watch(self):
         while not self._stop.is_set():
             now = time.monotonic()
+            newly_dead = []
             with self._lock:
                 for w, t in self.last.items():
                     if w not in self.dead and now - t > self.timeout_s:
                         self.dead.add(w)
-                        if self.on_failure:
-                            self.on_failure(w)
+                        newly_dead.append(w)
+            # callbacks outside the lock: they may beat/re-register
+            for w in newly_dead:
+                if self.on_failure:
+                    self.on_failure(w)
             time.sleep(self.timeout_s / 4)
 
     def close(self):

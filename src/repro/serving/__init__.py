@@ -53,8 +53,16 @@ from repro.serving.lm_session import LMDecodeSession
 from repro.serving.planner import AdmissionPlanner
 from repro.serving.predict import ExitDepthPredictor
 from repro.serving.queue import RequestQueue
-from repro.serving.request import (Request, RequestRejected, RequestShed)
+from repro.serving.request import (DispatchError, InvalidEngineOutput,
+                                   Request, RequestRejected, RequestShed)
+from repro.serving.resilience import (EnginePool, NoHealthyEngines,
+                                      PooledDartServer, ResilienceConfig,
+                                      pooled_cascade_server,
+                                      pooled_lm_session)
 
 __all__ = ["AsyncDartServer", "SchedulerConfig", "AdmissionPlanner",
            "ExitDepthPredictor", "RequestQueue", "LMDecodeSession",
-           "Request", "RequestRejected", "RequestShed"]
+           "Request", "RequestRejected", "RequestShed", "DispatchError",
+           "InvalidEngineOutput", "EnginePool", "PooledDartServer",
+           "ResilienceConfig", "NoHealthyEngines",
+           "pooled_cascade_server", "pooled_lm_session"]

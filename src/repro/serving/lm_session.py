@@ -33,9 +33,11 @@ import numpy as np
 
 from repro.obs import OBS
 from repro.obs import adapters as OBS_A
+from repro.obs import log as OBS_LOG
 from repro.serving.loop import SchedulerConfig, _BucketScheduler
 from repro.serving.predict import ExitDepthPredictor
-from repro.serving.request import Request, RequestRejected
+from repro.serving.request import (DispatchError, Request,
+                                   RequestRejected)
 
 
 class LMDecodeSession(_BucketScheduler):
@@ -92,8 +94,8 @@ class LMDecodeSession(_BucketScheduler):
             # the decode-time routing alpha is the Eq. 8 EMA with
             # infimum 0.0 — the sound global head-skip bound
             min_exit = self.predictor.min_exit(self.engine, 0.0)
-        tokens, stages = self.engine.generate(prompts, n_new,
-                                              min_exit=min_exit)
+        tokens, stages = self._engine_call(
+            lambda eng: eng.generate(prompts, n_new, min_exit=min_exit))
         now = self._clock()
         ends = np.cumsum([r.n for r in reqs])
         lats, missed, slices = [], [], []
@@ -212,8 +214,13 @@ class LMContinuousSession(LMDecodeSession):
                 OBS_A.record_slot_admit(self, req, self._clock())
             did = True
         if self.decoder.active_rows:
+            try:
+                stepped = self.decoder.step()
+            except Exception as e:                 # noqa: BLE001
+                self._fail_pool(e)
+                return True
             done = []
-            for tag, toks, stgs in self.decoder.step():
+            for tag, toks, stgs in stepped:
                 req = self._pending.pop(tag)
                 t_done = self._clock()
                 lat_ms = (t_done - req.t_submit) * 1e3
@@ -240,6 +247,30 @@ class LMContinuousSession(LMDecodeSession):
                 self.counters["completed"] += 1
             did = True
         return did
+
+    def _fail_pool(self, exc: Exception) -> None:
+        """Contain a decode-step failure: fail exactly the pooled
+        requests with a structured error, release their slots (freeing
+        pages for the next admissions), and leave the daemon serving.
+        Queued requests are untouched — the next pump() admits them
+        into the recovered pool."""
+        self.counters["step_errors"] = \
+            self.counters.get("step_errors", 0) + 1
+        self.last_error = exc
+        victims = list(self._pending.values())
+        OBS_LOG.error("lm_step", "continuous decode step failed",
+                      exc=exc, n_requests=len(victims),
+                      rids=[r.rid for r in victims[:8]])
+        err = DispatchError("step",
+                            victims[0].lane if victims else None,
+                            [r.rid for r in victims], exc)
+        for r in victims:
+            try:
+                self.decoder.release(r.rid)
+            except Exception:                      # noqa: BLE001
+                pass                 # slot already gone: nothing to free
+            r.fail(err)
+        self._pending.clear()
 
     def _refill_prefer(self):
         """Depth-aware refill score (``pop_next``'s ``prefer`` hook):

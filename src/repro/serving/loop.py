@@ -52,7 +52,7 @@ from repro.obs import log as OBS_LOG
 from repro.serving.planner import AdmissionPlanner
 from repro.serving.predict import ExitDepthPredictor
 from repro.serving.queue import RequestQueue
-from repro.serving.request import Request, RequestRejected
+from repro.serving.request import DispatchError, Request, RequestRejected
 
 #: result keys sliced per request out of a consolidated engine call
 _RESULT_KEYS = ("pred", "conf", "exit_idx", "alpha", "macs")
@@ -147,6 +147,20 @@ class _BucketScheduler:
 
     def _dispatch(self, reqs: list, reason: str) -> None:
         raise NotImplementedError
+
+    def _engine_call(self, fn):
+        """Run one engine call.  ``fn(engine) -> result``; the default
+        binds the scheduler's single engine.  The resilience layer
+        (:class:`~repro.serving.resilience.EnginePool`) overrides this
+        to add engine selection, retry/backoff and hedging without the
+        dispatch sites knowing."""
+        return fn(self.engine)
+
+    def _on_dispatch_error(self, reqs: list, exc: Exception) -> bool:
+        """Dispatch-failure hook: return True when the requests were
+        re-routed (e.g. requeued by the pool after an engine death) and
+        must NOT have their futures failed.  Default: unhandled."""
+        return False
 
     def _drain_one(self) -> bool:
         """Materialize one in-flight bucket if any; False when idle."""
@@ -282,6 +296,8 @@ class _BucketScheduler:
         try:
             self._dispatch(reqs, reason)
         except Exception as e:                     # noqa: BLE001
+            if self._on_dispatch_error(reqs, e):
+                return                             # re-routed, not failed
             self.counters["dispatch_errors"] = \
                 self.counters.get("dispatch_errors", 0) + 1
             self.last_error = e
@@ -289,8 +305,10 @@ class _BucketScheduler:
                           reason=reason, lane=reqs[0].lane,
                           n_requests=len(reqs),
                           rids=[r.rid for r in reqs[:8]])
+            err = e if isinstance(e, DispatchError) else DispatchError(
+                "dispatch", reqs[0].lane, [r.rid for r in reqs], e)
             for r in reqs:
-                r.fail(e)
+                r.fail(err)
 
     def flush(self) -> None:
         """Force-dispatch every queued request and materialize all
@@ -457,9 +475,10 @@ class AsyncDartServer(_BucketScheduler):
             # is monotone in alpha), so one min_exit covers the bucket
             min_exit = self.predictor.min_exit(self.engine,
                                                float(np.min(alpha)))
-        return self.engine.infer(x, mode=self.cfg.mode, record=True,
-                                 alpha=alpha, pad_to=pad_to,
-                                 min_exit=min_exit)
+        return self._engine_call(
+            lambda eng: eng.infer(x, mode=self.cfg.mode, record=True,
+                                  alpha=alpha, pad_to=pad_to,
+                                  min_exit=min_exit))
 
     def _dispatch(self, reqs: list, reason: str) -> None:
         x = np.concatenate([r.x for r in reqs])
@@ -489,11 +508,15 @@ class AsyncDartServer(_BucketScheduler):
             self._complete(reqs, out, t_dispatch)
         except Exception as e:                     # noqa: BLE001
             self.last_error = e
+            self.counters["complete_errors"] = \
+                self.counters.get("complete_errors", 0) + 1
             OBS_LOG.error("complete", "bucket materialization failed",
                           exc=e, lane=reqs[0].lane,
                           rids=[r.rid for r in reqs[:8]])
+            err = e if isinstance(e, DispatchError) else DispatchError(
+                "complete", reqs[0].lane, [r.rid for r in reqs], e)
             for r in reqs:
-                r.fail(e)
+                r.fail(err)
 
     def _has_inflight(self) -> bool:
         return bool(self._inflight)

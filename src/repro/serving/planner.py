@@ -109,6 +109,27 @@ class AdmissionPlanner:
             return list(self._depth_ema)
 
     # ------------------------------------------------------------------
+    # snapshot (serving-state checkpoint): the learned priors a restarted
+    # server should NOT have to re-learn from a cold stream
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        with self._lock:
+            return {"depth_ema": list(self._depth_ema),
+                    "global_depth": self._global_depth,
+                    "stage_ms": self._stage_ms}
+
+    def load_state_dict(self, state: dict) -> None:
+        with self._lock:
+            depth = list(state["depth_ema"])
+            if len(depth) != self.n_classes:
+                raise ValueError(
+                    f"snapshot has {len(depth)} depth classes, "
+                    f"planner has {self.n_classes}")
+            self._depth_ema = depth
+            self._global_depth = state["global_depth"]
+            self._stage_ms = state["stage_ms"]
+
+    # ------------------------------------------------------------------
     # admission-time SLO quoting (ISSUE 9): predicted depth x per-stage
     # service EMA — a latency quote in ms, not a MACs fraction.  The
     # pinned ``predicted_cost`` MACs prior stays intact (the cascade

@@ -30,6 +30,34 @@ class RequestRejected(RuntimeError):
     """Request refused at admission (lane over its queue limit)."""
 
 
+class DispatchError(RuntimeError):
+    """Structured failure of one dispatched/materialized bucket.
+
+    Futures fail with THIS (never a raw engine exception): callers see
+    which stage broke (``dispatch`` | ``complete`` | ``step``), which
+    lane and rids were affected, and the underlying ``cause`` — enough
+    to tell an injected fault from a malformed input without scraping
+    tracebacks.  Output-validation quarantine failures surface here too
+    (stage ``complete``, cause :class:`InvalidEngineOutput`).
+    """
+
+    def __init__(self, stage: str, lane, rids, cause: BaseException):
+        self.stage = stage
+        self.lane = lane
+        self.rids = list(rids)
+        self.cause = cause
+        super().__init__(
+            f"bucket {stage} failed (lane={lane!r}, "
+            f"rids={self.rids[:8]}): {type(cause).__name__}: {cause}")
+        self.__cause__ = cause
+
+
+class InvalidEngineOutput(RuntimeError):
+    """An engine call returned values that fail validation (non-finite
+    confidence or out-of-range exit stage) — quarantined instead of
+    being folded into telemetry."""
+
+
 @dataclasses.dataclass
 class Request:
     """One in-flight request (a sample batch + its admission metadata).

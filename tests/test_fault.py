@@ -28,6 +28,57 @@ def test_heartbeat_detects_dead_worker():
     assert "w0" not in mon.dead
 
 
+def test_heartbeat_elastic_membership():
+    """add_worker (re-)registers with a fresh deadline and clears the
+    death mark; remove_worker deregisters without firing the callback."""
+    failures = []
+    mon = HeartbeatMonitor(["w0"], timeout_s=0.15,
+                           on_failure=failures.append)
+    mon.add_worker("w1")
+    assert sorted(mon.workers()) == ["w0", "w1"]
+    mon.remove_worker("w1")                 # drained, not failed
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < 0.5:
+        mon.beat("w0")
+        time.sleep(0.02)
+    assert failures == [] and "w1" not in mon.dead
+    # a dead worker re-registered via add_worker is live again
+    mon.add_worker("w2")
+    t0 = time.monotonic()
+    while "w2" not in mon.dead and time.monotonic() - t0 < 2.0:
+        mon.beat("w0")
+        time.sleep(0.02)
+    assert failures == ["w2"]
+    mon.add_worker("w2")
+    assert "w2" not in mon.dead
+    mon.close()
+
+
+def test_heartbeat_callback_may_reenter_monitor():
+    """The recovery callback runs outside the monitor lock: calling
+    beat/add_worker from inside it must not deadlock the watch thread."""
+    mon = None
+    recovered = []
+
+    def on_failure(w):
+        recovered.append(w)
+        mon.add_worker(w + "-replacement")  # re-enter under no lock
+        mon.beat(w + "-replacement")
+
+    mon = HeartbeatMonitor(["w0", "w1"], timeout_s=0.1,
+                           on_failure=on_failure)
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < 0.6:
+        for w in mon.workers():              # everyone but w1 stays live
+            if w != "w1":
+                mon.beat(w)
+        time.sleep(0.02)
+    mon.close()
+    assert recovered == ["w1"]
+    assert "w1-replacement" in mon.workers()
+    assert "w1-replacement" not in mon.dead
+
+
 def test_shard_plan_reassignment_loses_nothing():
     idx = np.arange(64)
     plan = ShardPlan.even(["a", "b", "c", "d"], idx)

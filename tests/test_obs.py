@@ -49,7 +49,7 @@ from repro.obs.stats import SUMMARY_KEYS
 from repro.parallel.sharding import unzip
 from repro.serving import AsyncDartServer, SchedulerConfig
 from repro.serving.loop import _BucketScheduler
-from repro.serving.request import Request
+from repro.serving.request import DispatchError, Request
 
 ROOT = Path(__file__).resolve().parent.parent
 DATA = DatasetConfig(name="synth-cifar", n_train=128, n_eval=128)
@@ -305,8 +305,10 @@ def test_dispatch_failure_is_logged_and_counted(caplog):
     fut = sched.submit(np.zeros(3))
     with caplog.at_level(logging.ERROR, logger="repro.obs"):
         sched.flush()
-    with pytest.raises(_Boom):
+    with pytest.raises(DispatchError) as ei:
         fut.result(timeout=5)
+    assert isinstance(ei.value.cause, _Boom)
+    assert ei.value.stage == "dispatch"
     assert sched.counters["dispatch_errors"] == 1
     errs = obs.get_registry().counter(
         "dart_errors_total", "scheduler/dispatcher errors by component",

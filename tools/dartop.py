@@ -130,6 +130,33 @@ def summarize(fams: dict) -> dict:
                     if labels.get("backend") == "xla")
     errors = {labels.get("component", "?"): int(v) for labels, v in
               _series(fams, "dart_errors_total")}
+    health = {labels.get("engine", "?"): int(v) for labels, v in
+              _series(fams, "dart_engine_health")}
+    faults = {f"{labels.get('point', '?')}/{labels.get('kind', '?')}": int(v)
+              for labels, v in _series(fams, "dart_faults_injected_total")
+              if labels.get("point") != "_all"}
+
+    def _total(name: str, agg_label: str, agg_value: str) -> int:
+        # The pool publishes both per-event push samples and one
+        # authoritative aggregate row (engine="_pool" / point="_all");
+        # prefer the aggregate, fall back to summing the push samples.
+        rows = _series(fams, name)
+        agg = [v for labels, v in rows if labels.get(agg_label) == agg_value]
+        if agg:
+            return int(sum(agg))
+        return int(sum(v for labels, v in rows))
+
+    resilience = {
+        "engine_health": health,
+        "degradation_rung": int(_value(fams, "dart_degradation_rung")),
+        "retries": _total("dart_retries_total", "engine", "_pool"),
+        "hedges": _total("dart_hedges_total", "engine", "_pool"),
+        "requeues": int(sum(v for _, v in
+                            _series(fams, "dart_requeues_total"))),
+        "faults_injected": faults,
+        "pool_events": {labels.get("event", "?"): int(v) for labels, v in
+                        _series(fams, "dart_pool_events_total")},
+    }
     return {"latency_ms": _lane_latency(fams),
             "exits": _exit_hists(fams),
             "lanes": lanes,
@@ -141,7 +168,8 @@ def summarize(fams: dict) -> dict:
                             _series(fams, "dart_escalations_total")},
             "recompiles": int(recompiles),
             "xla_fallbacks": int(fallbacks),
-            "errors": errors}
+            "errors": errors,
+            "resilience": resilience}
 
 
 # ---------------------------------------------------------------------------
@@ -201,12 +229,32 @@ def render(s: dict) -> str:
     if s["queued"]:
         L.append("  queued: " + "  ".join(
             f"{k}={int(v)}" for k, v in sorted(s["queued"].items())))
+    res = s.get("resilience", {})
+    health = res.get("engine_health", {})
+    if health:
+        L.append("-- engine pool --")
+        tag = {2: "healthy", 1: "DEGRADED", 0: "DEAD/DRAINED"}
+        L.append("  " + "  ".join(
+            f"{eng}={tag.get(lvl, lvl)}"
+            for eng, lvl in sorted(health.items())))
+        L.append(f"  rung={res.get('degradation_rung', 0)}  "
+                 f"retries={res.get('retries', 0)}  "
+                 f"hedges={res.get('hedges', 0)}  "
+                 f"requeues={res.get('requeues', 0)}")
     alarms = []
     if s["recompiles"]:
         alarms.append(f"RECOMPILES={s['recompiles']}")
     if s["errors"]:
         alarms.append("ERRORS=" + ",".join(
             f"{k}:{v}" for k, v in sorted(s["errors"].items())))
+    unhealthy = sorted(e for e, lvl in health.items() if lvl < 2)
+    if unhealthy:
+        alarms.append("UNHEALTHY=" + ",".join(unhealthy))
+    if res.get("degradation_rung"):
+        alarms.append(f"DEGRADED_RUNG={res['degradation_rung']}")
+    n_faults = sum(res.get("faults_injected", {}).values())
+    if n_faults:
+        alarms.append(f"FAULTS_INJECTED={n_faults}")
     if alarms:
         L.append("!! " + "  ".join(alarms))
     if s["xla_fallbacks"]:
